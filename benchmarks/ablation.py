@@ -1,0 +1,41 @@
+"""Paper Fig. A1 analogue: dampening ratio γ and calibration-set size.
+
+Claims: smaller γ → better (down to numerical limits); more calibration
+samples → better.  Method: SM, 2:4, on the tiny LM.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import BenchResult, calib_for, eval_ppl, trained_model
+from repro.core import PruningEngine
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    model, params, pipe = trained_model("lm")
+    out: List[BenchResult] = []
+
+    gammas = [0.1, 0.01, 0.001] if not fast else [0.01]
+    calib = calib_for(model, n_samples=32)
+    for g in gammas:
+        t0 = time.monotonic()
+        eng = PruningEngine(model, "2:4", method="SM", blocksize=64, gamma=g)
+        pruned, _ = eng.run(params, calib)
+        ppl = eval_ppl(model, pruned, pipe)
+        out.append(BenchResult(
+            f"ablation/gamma={g}", (time.monotonic() - t0) * 1e6,
+            f"ppl={ppl:.4f}"))
+
+    sample_counts = [8, 32, 128] if not fast else [32]
+    for ns in sample_counts:
+        calib_n = calib_for(model, n_samples=ns)
+        t0 = time.monotonic()
+        eng = PruningEngine(model, "2:4", method="SM", blocksize=64)
+        pruned, _ = eng.run(params, calib_n)
+        ppl = eval_ppl(model, pruned, pipe)
+        out.append(BenchResult(
+            f"ablation/calib={ns}", (time.monotonic() - t0) * 1e6,
+            f"ppl={ppl:.4f}"))
+    return out

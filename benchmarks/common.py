@@ -1,0 +1,84 @@
+"""Shared benchmark infrastructure: trained tiny models + evaluation.
+
+The paper evaluates pruning methods on pretrained LLMs; offline we train
+tiny transformer + Mamba LMs once (cached under experiments/) and run
+every table against them.  Perplexity is on the synthetic eval stream —
+EXPERIMENTS.md compares *orderings and gaps*, the quantities the paper's
+claims are about (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.paper_tiny_lm import MAMBA
+from repro.data import DataPipeline, calibration_batches
+from repro.models import LM
+from repro.optim import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.train import TrainConfig, Trainer
+
+CKPT_ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    us_per_call: float        # wall time of the measured operation (µs)
+    derived: str              # the table's metric, e.g. "ppl=8.07"
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def trained_model(kind: str = "lm", steps: int = 300
+                  ) -> Tuple[LM, dict, DataPipeline]:
+    """Train-once-and-cache the tiny LM ('lm') or tiny Mamba ('mamba')."""
+    cfg = get_config("paper_tiny_lm") if kind == "lm" else MAMBA
+    model = LM(cfg)
+    out = os.path.join(CKPT_ROOT, f"tiny_{kind}_ckpt")
+    pipe = DataPipeline(cfg, global_batch=16, seq_len=64, seed=0)
+    opt = AdamW(lr=warmup_cosine(1e-3, 20, steps))
+    tc = TrainConfig(total_steps=steps, global_batch=16, seq_len=64,
+                     ckpt_every=steps, out_dir=out, log_every=100)
+    trainer = Trainer(model, opt, pipe, tc)
+    params, _, _ = trainer.run()       # no-op if the checkpoint exists
+    return model, params, pipe
+
+
+def eval_ppl(model: LM, params, pipe: DataPipeline, n: int = 8) -> float:
+    tot = cnt = 0.0
+    for i in range(n):
+        _, m = model.loss_fn(params, pipe.eval_batch(i))
+        tot += float(m["ce"]) * float(m["tokens"])
+        cnt += float(m["tokens"])
+    return float(np.exp(tot / cnt))
+
+
+def eval_last_token_acc(model: LM, params, pipe: DataPipeline,
+                        n: int = 8) -> float:
+    """LAMBADA-analogue: accuracy of predicting the final token of each
+    eval segment (the paper's most sparsity-sensitive metric, Sec. 5.3)."""
+    hit = tot = 0
+    for i in range(n):
+        batch = pipe.eval_batch(i)
+        logits, _ = model.forward(params, batch)
+        pred = jnp.argmax(logits[:, -2, :], axis=-1)
+        hit += int(jnp.sum(pred == batch["tokens"][:, -1]))
+        tot += int(batch["tokens"].shape[0])
+    return hit / tot
+
+
+def calib_for(model: LM, n_samples: int = 32, seq_len: int = 64):
+    return calibration_batches(model.cfg, n_samples=n_samples,
+                               seq_len=seq_len, batch=8)

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: wall time (CPU interpret — structural only)
+plus the *derived* quantity that matters on TPU: weight-bytes saved by
+2:4 packing, Hessian FLOPs, combo-scoring throughput, attention memory.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchResult
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.monotonic()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.monotonic() - t0) / reps * 1e6
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    out: List[BenchResult] = []
+    key = jax.random.key(0)
+
+    # nm_spmm: derived = weight-HBM-bytes dense vs packed
+    k, n, m = 256, 256, 128
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    gt = w.reshape(k // 4, 4, n).transpose(0, 2, 1)
+    _, idx = jax.lax.top_k(-jnp.abs(gt), 2)
+    mask = jax.nn.one_hot(idx, 4).sum(-2) > 0
+    wg = jnp.where(mask, 0, gt).transpose(0, 2, 1).reshape(k, n)
+    vals, pidx = ops.compress_24(wg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+    us = _time(lambda a: ops.nm_matmul(a, vals, pidx), x)
+    dense_b = k * n * 2                       # bf16 dense
+    packed_b = (k // 2) * n * 2 + (k // 2) * n * 0.25   # vals bf16 + 2-bit idx
+    out.append(BenchResult(
+        "kernel/nm_spmm", us,
+        f"weight_bytes {dense_b}→{packed_b:.0f} ({dense_b / packed_b:.2f}x)"))
+
+    # hessian_accum: derived = GFLOP per call
+    xh = jax.random.normal(key, (128, 512))
+    us = _time(ops.hessian_xxt, xh)
+    out.append(BenchResult(
+        "kernel/hessian_accum", us,
+        f"flops={2 * 128 * 128 * 512 / 1e6:.1f}MF"))
+
+    # nm_select: derived = combos scored per call
+    wsel = jax.random.normal(key, (128, 128))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (128, 128))
+    hinv = a @ a.T / 128 + jnp.eye(128)
+    us = _time(ops.nm_select_mask, wsel, hinv)
+    out.append(BenchResult(
+        "kernel/nm_select", us, f"combos={128 * 32 * 6}"))
+
+    # flash_attn: derived = score-matrix bytes avoided
+    q = jax.random.normal(key, (2, 256, 64))
+    us = _time(lambda a: ops.attention(a, a, a, True), q)
+    out.append(BenchResult(
+        "kernel/flash_attn", us,
+        f"dense_scores_bytes={2 * 256 * 256 * 4}→tiled"))
+    return out

@@ -1,0 +1,77 @@
+"""Render experiments/dryrun*.jsonl into the EXPERIMENTS.md §Roofline
+markdown table (one row per arch × shape × mesh).
+
+  PYTHONPATH=src python -m benchmarks.report [path ...]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[dict]:
+    recs: Dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(recs.values())
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}GB"
+    if b >= 1e6:
+        return f"{b / 1e6:.0f}MB"
+    return f"{b / 1e3:.0f}KB"
+
+
+def fmt_s(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s * 1e3:.2f}ms"
+
+
+def table(recs: List[dict], mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "roofline-frac | MODEL/impl FLOPs | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — |"
+                f" — | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                        f"{r.get('error', '?')} | | | | | | |")
+            continue
+        hbm = r["argument_bytes"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_flop_ratio']:.2f} | {fmt_bytes(hbm)} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    paths = sys.argv[1:] or ["experiments/dryrun.jsonl"]
+    for path in paths:
+        recs = load(path)
+        for mesh in ("16x16", "2x16x16"):
+            n = sum(1 for r in recs if r["mesh"] == mesh)
+            if not n:
+                continue
+            print(f"\n### {path} — mesh {mesh}\n")
+            print(table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

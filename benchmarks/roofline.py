@@ -1,0 +1,55 @@
+"""§Roofline reporting: aggregate experiments/dryrun.jsonl into the
+per-(arch × shape × mesh) three-term roofline table.
+
+The dry-run (launch/dryrun.py) must have produced the JSONL; this module
+just reduces it (no jax device work) so `-m benchmarks.run` stays fast.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import BenchResult
+
+DRYRUN_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "dryrun.jsonl")
+
+
+def load_records(path: str = DRYRUN_PATH):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"],)] = r  # last wins
+    return list(recs.values())
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    recs = load_records()
+    out: List[BenchResult] = []
+    if not recs:
+        return [BenchResult(
+            "roofline/missing", 0.0,
+            "run `python -m repro.launch.dryrun --all --multi-pod both "
+            "--out experiments/dryrun.jsonl` first")]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    failed = [r for r in recs if r["status"] == "failed"]
+    out.append(BenchResult(
+        "roofline/cells", 0.0,
+        f"ok={len(ok)} skipped={len(skipped)} failed={len(failed)}"))
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        terms = (f"c={r['t_compute_s'] * 1e3:.2f}ms "
+                 f"m={r['t_memory_s'] * 1e3:.2f}ms "
+                 f"x={r['t_collective_s'] * 1e3:.2f}ms "
+                 f"dom={r['dominant']} "
+                 f"useful={r['useful_flop_ratio']:.3f}"
+                 if r.get("useful_flop_ratio") else "")
+        out.append(BenchResult(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["compile_s"] * 1e6, terms))
+    return out

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table + kernels + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,...] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV (and writes
+experiments/bench_results.csv).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = ("table1", "table2", "table3", "ablation", "kernelbench",
+           "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {MODULES}")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sweeps (CI smoke)")
+    args = ap.parse_args()
+
+    chosen = args.only.split(",") if args.only else list(MODULES)
+    results = []
+    for name in chosen:
+        if name not in MODULES:
+            raise SystemExit(f"unknown benchmark {name!r}; pick from "
+                             f"{MODULES}")
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        results.extend(mod.run(fast=args.fast))
+
+    print("name,us_per_call,derived")
+    lines = [r.csv() for r in results]
+    for line in lines:
+        print(line)
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "experiments", "bench_results.csv")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

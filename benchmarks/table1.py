@@ -1,0 +1,44 @@
+"""Paper Table 1 analogue: perplexity of SS/SM (unstructured 50%) and
+SS/SM/MS/MM (2:4) across block sizes, on the trained tiny LM.
+
+Paper claims validated here:
+  - SM < SS for unstructured;  SM/MM < SS for 2:4;
+  - MM typically best, SM ≈ MM at lower complexity (their recommendation);
+  - holds across block sizes (S=64 and S=all).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import (
+    BenchResult,
+    calib_for,
+    eval_ppl,
+    trained_model,
+)
+from repro.core import PruningEngine
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    model, params, pipe = trained_model("lm")
+    calib = calib_for(model)
+    dense = eval_ppl(model, params, pipe)
+    out = [BenchResult("table1/dense", 0.0, f"ppl={dense:.4f}")]
+
+    blocksizes = [64] if fast else [32, 64]
+    cases = []
+    for bs in blocksizes:
+        cases += [("0.5", m, bs) for m in ("SS", "SM")]
+        cases += [("2:4", m, bs) for m in ("SS", "SM", "MS", "MM")]
+
+    for spec, method, bs in cases:
+        t0 = time.monotonic()
+        eng = PruningEngine(model, spec, method=method, blocksize=bs)
+        pruned, _ = eng.run(params, calib)
+        dt = time.monotonic() - t0
+        ppl = eval_ppl(model, pruned, pipe)
+        name = f"table1/{spec}/{method}/S={bs}"
+        out.append(BenchResult(name, dt * 1e6, f"ppl={ppl:.4f}"))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Table 2 analogue: high sparsity (70% / 80%) — the gap between
+SparseGPT (SS) and ours (SM) must WIDEN as sparsity grows, plus the
+magnitude/wanda baselines for reference."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import BenchResult, calib_for, eval_ppl, trained_model
+from repro.core import PruningEngine
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    model, params, pipe = trained_model("lm")
+    calib = calib_for(model)
+    dense = eval_ppl(model, params, pipe)
+    out = [BenchResult("table2/dense", 0.0, f"ppl={dense:.4f}")]
+
+    sparsities = ["0.7", "0.8"] if not fast else ["0.7"]
+    methods = ["magnitude", "wanda", "SS", "SM"]
+    for sp in sparsities:
+        for method in methods:
+            t0 = time.monotonic()
+            eng = PruningEngine(model, sp, method=method, blocksize=64)
+            pruned, _ = eng.run(params, calib)
+            dt = time.monotonic() - t0
+            ppl = eval_ppl(model, pruned, pipe)
+            out.append(BenchResult(
+                f"table2/{sp}/{method}", dt * 1e6, f"ppl={ppl:.4f}"))
+    return out

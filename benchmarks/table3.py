@@ -1,0 +1,39 @@
+"""Paper Table 3 analogue: Mamba-family LM pruning + the last-token-
+prediction accuracy (LAMBADA-analogue — the paper's most sparsity-
+sensitive metric) alongside perplexity."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import (
+    BenchResult,
+    calib_for,
+    eval_last_token_acc,
+    eval_ppl,
+    trained_model,
+)
+from repro.core import PruningEngine
+
+
+def run(fast: bool = False) -> List[BenchResult]:
+    model, params, pipe = trained_model("mamba")
+    calib = calib_for(model)
+    dense_ppl = eval_ppl(model, params, pipe)
+    dense_acc = eval_last_token_acc(model, params, pipe)
+    out = [BenchResult("table3/mamba/dense", 0.0,
+                       f"ppl={dense_ppl:.4f} acc={dense_acc:.3f}")]
+
+    methods = ["magnitude", "wanda", "SS", "SM"]
+    for method in methods:
+        t0 = time.monotonic()
+        eng = PruningEngine(model, "0.5", method=method, blocksize=64)
+        pruned, _ = eng.run(params, calib)
+        dt = time.monotonic() - t0
+        ppl = eval_ppl(model, pruned, pipe)
+        acc = eval_last_token_acc(model, pruned, pipe)
+        out.append(BenchResult(
+            f"table3/mamba/0.5/{method}", dt * 1e6,
+            f"ppl={ppl:.4f} acc={acc:.3f}"))
+    return out

@@ -1,0 +1,64 @@
+"""Row-parallel distributed pruning (Remark 4.2) — run with virtual
+devices to see the shard_map path produce bit-identical results:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/distributed_prune.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import hessian_allreduce, prune_matrix_sharded
+from repro.core.hessian import HessianAccumulator
+from repro.core.pruner import prune_matrix
+from repro.core.sparsity import SparsitySpec
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    n, m = 64, 128
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (n, m)) * 0.1
+
+    # 1. data-parallel calibration: each data shard accumulates its own
+    #    Hessian over its calibration tokens, then one psum merges them.
+    shards = []
+    for i in range(2):
+        acc = HessianAccumulator(m)
+        acc.update(jax.random.normal(jax.random.fold_in(key, i),
+                                     (m, 256 + 64 * i)))
+        shards.append(acc)
+    h = hessian_allreduce(
+        mesh, jnp.stack([a.h for a in shards]),
+        jnp.stack([a.count for a in shards]))
+    print(f"merged Hessian from {len(shards)} data shards")
+
+    # 2. row-parallel MRP prune over the `model` axis — zero collectives
+    #    inside the layer (rows are independent, Remark 4.2)
+    t0 = time.monotonic()
+    w_sh, mask_sh = prune_matrix_sharded(w, h, "2:4", mesh, method="SM",
+                                         blocksize=64)
+    t_sh = time.monotonic() - t0
+
+    # 3. single-device reference
+    res = prune_matrix(w, h, SparsitySpec.parse("2:4"), method="SM",
+                       blocksize=64, row_balanced=True)
+    diff = float(jnp.abs(w_sh - res.w).max())
+    same_mask = bool(jnp.all(mask_sh == res.mask))
+    print(f"sharded prune: {t_sh:.2f}s; |Δw| vs single-device = {diff:.2e}; "
+          f"identical mask: {same_mask}")
+    print(f"sparsity: {float(jnp.mean(mask_sh)):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fault-tolerant training demo: crash mid-run, resume bit-exactly, with
+int8 error-feedback gradient compression enabled.
+
+  PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+
+import json
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data import DataPipeline
+from repro.models import LM
+from repro.optim import AdamW
+from repro.train import TrainConfig, Trainer
+
+
+def build(out):
+    cfg = get_smoke("paper_tiny_lm")
+    model = LM(cfg)
+    pipe = DataPipeline(cfg, global_batch=8, seq_len=32, seed=0)
+    tc = TrainConfig(total_steps=60, global_batch=8, seq_len=32,
+                     ckpt_every=10, out_dir=out, log_every=10,
+                     grad_compression=True)
+    return Trainer(model, AdamW(lr=1e-3), pipe, tc)
+
+
+def main():
+    out_a, out_b = "/tmp/ft_demo_crash", "/tmp/ft_demo_clean"
+    for d in (out_a, out_b):
+        shutil.rmtree(d, ignore_errors=True)
+
+    print("run A: train 25/60 steps then 'crash' ...")
+    build(out_a).run(max_steps=25)
+
+    print("run A': new process resumes from the last checkpoint ...")
+    trainer = build(out_a)
+    start, *_ = trainer.restore_or_init()
+    print(f"  resumed at step {start} (checkpoint survived the crash)")
+    params_a, _, info = trainer.run()
+    print(f"  finished: {info['steps']} more steps")
+
+    print("run B: uninterrupted 60 steps ...")
+    params_b, _, _ = build(out_b).run()
+
+    diff = max(
+        float(np.abs(np.asarray(x, np.float32)
+                     - np.asarray(y, np.float32)).max())
+        for x, y in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_b)))
+    print(f"max |interrupted - uninterrupted| param diff: {diff:.2e} "
+          f"(bit-exact resume: {diff == 0.0})")
+
+    losses = [json.loads(l)["loss"] for l in open(out_b + "/metrics.jsonl")]
+    print(f"loss trace (int8 EF-compressed grads): "
+          f"{[round(x, 3) for x in losses]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: MRP post-training pruning framework (EMNLP 2024) in JAX.
+
+Implements "Pruning Foundation Models for High Accuracy without Retraining"
+(Zhao et al., EMNLP 2024 Findings) as a production-grade, multi-pod JAX
+framework: the Multiple Removal Problem (MRP) closed-form pruning solutions
+(S/M for mask selection and compensation), SparseGPT/Wanda/Magnitude
+baselines, a model zoo covering the 10 assigned architectures, distributed
+pruning/training/serving, and Pallas TPU kernels for the hot paths.
+"""
+
+__version__ = "1.0.0"

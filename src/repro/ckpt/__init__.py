@@ -1,0 +1,15 @@
+"""Fault-tolerant checkpointing: atomic npz + manifest, elastic restore."""
+
+from repro.ckpt.store import (
+    CheckpointStore,
+    PruneProgressStore,
+    save_pytree,
+    load_pytree,
+)
+
+__all__ = [
+    "CheckpointStore",
+    "PruneProgressStore",
+    "save_pytree",
+    "load_pytree",
+]

@@ -1,0 +1,203 @@
+"""Atomic sharded checkpoints with manifest + content hashes.
+
+Layout:
+  <dir>/step_000042/            one directory per step
+    arrays.npz                  every pytree leaf, path-keyed
+    manifest.json               {step, keys, shapes, dtypes, sha256, extra}
+  <dir>/LATEST                  text file: the last *complete* step dir
+
+Crash safety: writes go to ``step_X.tmp-<pid>`` and are atomically
+``os.replace``d into place, LATEST is updated last — a reader can never
+observe a half-written checkpoint.  Hash verification on load catches
+torn/corrupted files (a node dying mid-fsync).
+
+Elastic restore: leaves load as host numpy; the trainer re-device_puts
+them under the *current* mesh's shardings — restoring a 2-pod checkpoint
+onto 1 pod (or a different mesh shape) is the same code path (tested).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# pytree <-> flat path dict
+# ----------------------------------------------------------------------
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for keypath, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        out[path] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for keypath, tmpl in paths:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        if path not in flat:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        arr = flat[path]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"leaf {path!r}: checkpoint shape {arr.shape} != "
+                f"model shape {tmpl.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_pytree(path: str, tree: Any, extra: Optional[dict] = None) -> None:
+    """Atomic single-file-pair save of a pytree into directory ``path``."""
+    flat = _flatten(tree)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    data = buf.getvalue()
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "sha256": hashlib.sha256(data).hexdigest(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.isdir(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, template: Any = None,
+                verify: bool = True) -> Tuple[Any, dict]:
+    """Load (tree-or-flat-dict, extra). Verifies content hash."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "arrays.npz"), "rb") as f:
+        data = f.read()
+    if verify:
+        digest = hashlib.sha256(data).hexdigest()
+        if digest != manifest["sha256"]:
+            raise IOError(f"checkpoint {path}: sha256 mismatch (corrupt)")
+    arrs = dict(np.load(io.BytesIO(data)))
+    if template is None:
+        return arrs, manifest.get("extra", {})
+    return _unflatten_into(template, arrs), manifest.get("extra", {})
+
+
+# ----------------------------------------------------------------------
+class CheckpointStore:
+    """Step-indexed checkpoint directory with retention + LATEST pointer."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        path = self._step_dir(step)
+        save_pytree(path, tree, extra={"step": step, **(extra or {})})
+        latest_tmp = os.path.join(self.root, f".LATEST.tmp-{os.getpid()}")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(path))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(latest_tmp, os.path.join(self.root, "LATEST"))
+        self._retain()
+        return path
+
+    def _retain(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def list_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[len("step_"):]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.root, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            path = os.path.join(self.root, name)
+            if os.path.isdir(path):
+                try:
+                    return int(name[len("step_"):])
+                except ValueError:
+                    pass
+        steps = self.list_steps()   # fall back to scanning (LATEST torn)
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Optional[Tuple[int, Any, dict]]:
+        """Restore the newest *valid* checkpoint ≤ step (or latest).
+
+        Walks backwards past corrupt checkpoints (torn writes on a dead
+        node) until a hash-valid one loads.
+        """
+        steps = [s for s in self.list_steps() if step is None or s <= step]
+        for s in reversed(steps):
+            try:
+                tree, extra = load_pytree(self._step_dir(s), template)
+                return s, tree, extra
+            except Exception:  # corrupt — keep walking back
+                continue
+        return None
+
+
+# ----------------------------------------------------------------------
+class PruneProgressStore:
+    """Per-segment pruning progress (core.engine fault tolerance)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.path = os.path.join(root, "prune_progress")
+
+    def save(self, next_segment: int, params: Any) -> None:
+        save_pytree(self.path, params, extra={"next_segment": next_segment})
+
+    def load(self) -> Optional[Tuple[int, Any]]:
+        if not os.path.isdir(self.path):
+            return None
+        flat, extra = load_pytree(self.path, template=None)
+        return extra["next_segment"], flat
+
+    def load_into(self, template: Any) -> Optional[Tuple[int, Any]]:
+        if not os.path.isdir(self.path):
+            return None
+        tree, extra = load_pytree(self.path, template)
+        return extra["next_segment"], tree
+
+    def finalize(self) -> None:
+        if os.path.isdir(self.path):
+            shutil.rmtree(self.path)

@@ -1,0 +1,54 @@
+"""paper-tiny-lm — CPU-scale analogue of the paper's evaluation family.
+
+The paper prunes LLaMA2/OPT/BLOOM (transformers) and Mamba LMs. Offline,
+we train this tiny dense LM (and a tiny Mamba twin, ``MAMBA``) on the
+synthetic corpus, then reproduce the paper's tables: method ordering
+(SS < SM/MM), unstructured vs 2:4, high-sparsity degradation, and the
+γ / calibration-size ablations. See benchmarks/.
+"""
+
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paper-tiny-lm",
+    family="dense",
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=384,
+    vocab_size=512,
+    period=("attn",),
+    mlp_kind="swiglu",
+    dtype="float32",
+)
+
+SMOKE = ArchConfig(
+    name="paper-tiny-lm-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    period=("attn",),
+    mlp_kind="swiglu",
+    dtype="float32",
+)
+
+# Mamba twin for the paper's Table 3 (Mamba-based LLM) experiments.
+MAMBA = ArchConfig(
+    name="paper-tiny-mamba",
+    family="ssm",
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=512,
+    period=("mamba",),
+    mlp_kind="none",
+    ssm_state=8,
+    dtype="float32",
+)

@@ -1,0 +1,95 @@
+"""The assigned input shapes × applicability rules × ShapeDtypeStruct specs.
+
+Shapes (per assignment; every LM arch pairs with all four):
+  train_4k     seq 4,096   global_batch 256   → lowers train_step
+  prefill_32k  seq 32,768  global_batch 32    → lowers prefill_step
+  decode_32k   seq 32,768  global_batch 128   → lowers serve_step
+                                                (1 new token, 32k KV cache)
+  long_500k    seq 524,288 global_batch 1     → lowers serve_step
+                                                (sub-quadratic archs only)
+
+``input_specs(cfg, shape)`` returns {name: ShapeDtypeStruct} — weak-type
+correct, shardable, ZERO device allocation (the dry-run contract).  For
+decode shapes the cache specs come from ``LM.init_cache_shapes`` (also
+allocation-free via eval_shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models.transformer import LM
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_is_applicable(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    """(ok, reason-if-skipped). Skip rules are declared per-config."""
+    if shape not in SHAPES:
+        raise KeyError(f"unknown shape {shape!r}")
+    if shape in cfg.skip_shapes:
+        return False, cfg.skip_shapes[shape]
+    return True, ""
+
+
+def applicable_shapes(cfg: ArchConfig):
+    return [s for s in SHAPES if shape_is_applicable(cfg, s)[0]]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sp = SHAPES[shape]
+    b, t = sp.global_batch, sp.seq_len
+    specs: Dict[str, object] = {}
+    model = LM(cfg)
+
+    if sp.kind == "train":
+        t_text = t
+        if cfg.frontend is not None and not cfg.encdec:
+            t_text = t - cfg.frontend_len       # frontend occupies positions
+        specs["tokens"] = _sds((b, t_text), jnp.int32)
+        specs["labels"] = _sds((b, t_text), jnp.int32)
+        if cfg.frontend is not None:
+            specs["frontend_feats"] = _sds(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+
+    if sp.kind == "prefill":
+        t_text = t
+        if cfg.frontend is not None and not cfg.encdec:
+            t_text = t - cfg.frontend_len
+        specs["tokens"] = _sds((b, t_text), jnp.int32)
+        if cfg.frontend is not None:
+            specs["frontend_feats"] = _sds(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        specs["cache"] = model.init_cache_shapes(b, t)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    specs["token"] = _sds((b,), jnp.int32)
+    specs["cache"] = model.init_cache_shapes(b, t)
+    specs["pos"] = _sds((), jnp.int32)
+    return specs

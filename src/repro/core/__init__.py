@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution — MRP post-training pruning.
+
+Public API:
+  - SparsitySpec.parse("0.5") / .parse("2:4")
+  - prune_matrix(w, hessian, spec, method="SM", blocksize=128)
+  - PruningEngine: whole-model layer-wise pruning (see core.engine)
+"""
+
+from repro.core.sparsity import SparsitySpec
+from repro.core.hessian import HessianAccumulator, dampened_inverse
+from repro.core.pruner import prune_matrix, PruneResult, METHODS
+from repro.core.engine import PruningEngine, LinearSpec
+
+__all__ = [
+    "SparsitySpec",
+    "HessianAccumulator",
+    "dampened_inverse",
+    "prune_matrix",
+    "PruneResult",
+    "METHODS",
+    "PruningEngine",
+    "LinearSpec",
+]

@@ -1,0 +1,82 @@
+"""Layer-wise calibration capture (paper Sec. 3.3 / SparseGPT Sec. 3).
+
+The pruning engine processes one model segment (transformer block) at a
+time: it runs the calibration set through the segment in *capture* mode,
+which returns — alongside the hidden states — the inputs ``x`` of every
+linear layer inside the segment.  Those feed the streaming Hessian
+accumulators (H = mean_t 2 x_t x_tᵀ), one per prunable linear.
+
+Capture format (the contract between models/ and core/engine):
+
+  captures: dict[str, Capture]
+  Capture  = x                      # (..., T, d_in) dense-token linear
+           | (x, weights)           # weights (..., T) — MoE routed tokens /
+                                    # padding validity; 0-weight tokens are
+                                    # excluded from the Hessian.
+
+Leading dims are arbitrary (batch, experts, ...) and get flattened here.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hessian import HessianAccumulator
+
+Capture = Union[jax.Array, Tuple[jax.Array, jax.Array]]
+
+
+def _flatten_capture(cap: Capture) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Normalize a capture to (x2d (T, d), weights (T,) | None)."""
+    if isinstance(cap, tuple):
+        x, w = cap
+        d = x.shape[-1]
+        x2 = x.reshape(-1, d)
+        w2 = w.reshape(-1)
+        if w2.shape[0] != x2.shape[0]:
+            raise ValueError(
+                f"capture weights {w.shape} incompatible with x {x.shape}")
+        return x2, w2
+    d = cap.shape[-1]
+    return cap.reshape(-1, d), None
+
+
+class CalibrationSet:
+    """Holds one Hessian accumulator per (named) linear in a segment."""
+
+    def __init__(self):
+        self.accs: Dict[str, HessianAccumulator] = {}
+
+    def update(self, captures: Mapping[str, Capture]) -> None:
+        for name, cap in captures.items():
+            x2, w2 = _flatten_capture(cap)
+            acc = self.accs.get(name)
+            if acc is None:
+                acc = HessianAccumulator(x2.shape[1])
+                self.accs[name] = acc
+            if w2 is None:
+                acc.update_tokens(x2)
+            else:
+                acc.update_weighted(x2.T, w2)
+
+    def merge(self, other: "CalibrationSet") -> "CalibrationSet":
+        out = CalibrationSet()
+        names = set(self.accs) | set(other.accs)
+        for name in names:
+            a, b = self.accs.get(name), other.accs.get(name)
+            if a is None:
+                out.accs[name] = b
+            elif b is None:
+                out.accs[name] = a
+            else:
+                out.accs[name] = a.merge(b)
+        return out
+
+    def hessian(self, name: str) -> jax.Array:
+        return self.accs[name].finalize()
+
+    def names(self) -> Iterable[str]:
+        return self.accs.keys()

@@ -1,0 +1,63 @@
+"""Per-weight saliency scores for pruning-mask selection (Solution 𝔖 family).
+
+All scores are "loss if this weight were pruned alone" proxies; lower
+score ⇒ pruned first.
+
+  - magnitude:  |w|                        (Zhu & Gupta 2017)
+  - wanda:      |w| · ‖x_j‖₂               (Sun et al. 2023)
+  - obs:        w² / (2 [H⁻¹]_jj)          (paper Eq. 14 — Solution 𝔖)
+  - sparsegpt:  w² / [H⁻¹]_jj²             (SparseGPT public code variant)
+
+`obs` is the exact single-removal loss (Eq. 14), derived from the MRP loss
+Eq. 12 under a diagonal-interaction assumption. SparseGPT's released code
+uses the square of the inverse diagonal instead; we keep both so the 𝔖𝔖
+baseline can match either convention (`sparsegpt` is the default for the
+baseline, `obs` for our methods, per DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_score(w: jax.Array) -> jax.Array:
+    return jnp.abs(w)
+
+
+def wanda_score(w: jax.Array, h: jax.Array) -> jax.Array:
+    """|w| * ||x_j||_2 per input column.
+
+    H = mean_t 2 x xᵀ ⇒ diag(H)_j = 2·mean_t x_j² ⇒ ‖x_j‖ ∝ sqrt(diag(H)_j).
+    The constant factor is rank-irrelevant.
+    """
+    norms = jnp.sqrt(jnp.clip(jnp.diag(h), 0.0, None))
+    return jnp.abs(w) * norms[None, :]
+
+
+def obs_score(w: jax.Array, hinv: jax.Array) -> jax.Array:
+    """Paper Eq. (14): L̂ = w_ij² / (2 [H⁻¹]_jj)."""
+    d = jnp.clip(jnp.diag(hinv), 1e-30, None)
+    return (w.astype(jnp.float32) ** 2) / (2.0 * d[None, :])
+
+
+def sparsegpt_score(w: jax.Array, hinv: jax.Array) -> jax.Array:
+    """SparseGPT code's criterion: w² / diag(H⁻¹)² (uses the Cholesky diag)."""
+    d = jnp.clip(jnp.diag(hinv), 1e-30, None)
+    return (w.astype(jnp.float32) ** 2) / (d[None, :] ** 2)
+
+
+SCORE_FNS = {
+    "magnitude": lambda w, h, hinv: magnitude_score(w),
+    "wanda": lambda w, h, hinv: wanda_score(w, h),
+    "obs": lambda w, h, hinv: obs_score(w, hinv),
+    "sparsegpt": lambda w, h, hinv: sparsegpt_score(w, hinv),
+}
+
+
+def compute_score(name: str, w: jax.Array, h: jax.Array, hinv: jax.Array) -> jax.Array:
+    try:
+        fn = SCORE_FNS[name]
+    except KeyError:
+        raise ValueError(f"unknown score {name!r}; one of {sorted(SCORE_FNS)}")
+    return fn(w, h, hinv)

@@ -1,0 +1,11 @@
+"""Data pipeline: synthetic corpora, step-indexed batching, calibration."""
+
+from repro.data.synthetic import MarkovCorpus, zipf_logits
+from repro.data.pipeline import DataPipeline, calibration_batches
+
+__all__ = [
+    "MarkovCorpus",
+    "zipf_logits",
+    "DataPipeline",
+    "calibration_batches",
+]

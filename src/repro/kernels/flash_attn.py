@@ -1,0 +1,109 @@
+"""Causal flash attention (online softmax) — Pallas TPU kernel.
+
+Used by the 32k prefill shapes: materializing a (32768)² score matrix is
+4GB f32 per head — flash attention keeps only (bq, bk) score tiles in
+VMEM with running max/sum rescaling (Dao 2022, adapted to TPU: the kv
+dimension is the innermost *sequential* grid axis, accumulator + running
+stats live in VMEM scratch that persists across kv steps).
+
+Grid (BH, T/bq, T/bk).  Causal: kv tiles entirely above the diagonal are
+skipped via @pl.when (their DMA still issues, but no FLOPs — on TPU the
+mosaic pipeliner overlaps the dead DMA with live compute).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, bq: int, bk: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # kv tiles fully above the diagonal contribute nothing — skip
+        pl.when((ki * bk) <= (qi * bq + bq - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attn(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """q,k,v: (BH, T, D) (heads pre-folded). Returns (BH, T, D) f32."""
+    bh, t, d = q.shape
+    if t % bq or t % bk:
+        raise ValueError(f"T={t} not divisible by ({bq},{bk})")
+    scale = 1.0 / math.sqrt(d)
+    grid = (bh, t // bq, t // bk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Streaming calibration Hessian H = 2·x·xᵀ (Pallas TPU kernel).
+
+The pruning engine's hot loop: for every linear layer, all calibration
+tokens stream through H += 2 x xᵀ.  x is (m, T) with T ≫ m; one H tile
+(bi, bj) stays resident in VMEM while token chunks (bt) stream from HBM —
+the classic outer-product accumulation, f32 accumulator, MXU tiles.
+
+Grid (m/bi, m/bj, T/bt), token dim innermost (sequential accumulation).
+VMEM: xi (bi,bt) + xj (bj,bt) + acc (bi,bj) f32 ≈ 3·64KB at 128² tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(xi_ref, xj_ref, o_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)          # (bi, bt)
+    xj = xj_ref[...].astype(jnp.float32)          # (bj, bt)
+    o_ref[...] += 2.0 * jax.lax.dot_general(
+        xi, xj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bt", "interpret"))
+def hessian_accum(
+    x: jax.Array,
+    *,
+    bi: int = 128,
+    bj: int = 128,
+    bt: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """H = 2 · x xᵀ for x (m, T). Returns (m, m) float32."""
+    m, t = x.shape
+    if m % bi or m % bj or t % bt:
+        raise ValueError(f"({m},{t}) not divisible by ({bi},{bj},{bt})")
+    grid = (m // bi, m // bj, t // bt)
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bt), lambda i, j, tt: (i, tt)),
+            pl.BlockSpec((bj, bt), lambda i, j, tt: (j, tt)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, tt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,92 @@
+"""Solution 𝔐 2:4 mask selection — Eq. (12) combo scoring (Pallas kernel).
+
+For every group of 4 columns, score all C(4,2)=6 pruning combinations
+with the exact MRP loss (Eq. 12):
+
+  L(p,q) = ½ · w_{p,q} · A⁻¹ · w_{p,q}ᵀ,   A = Hinv[{p,q},{p,q}]
+
+and emit the argmin combination's mask.  The 2×2 inverse is closed-form
+(adjugate/det), so the whole thing is branch-free VPU arithmetic — the 6
+combos are unrolled at trace time.
+
+Inputs: w tile (br, 4·bg) and the per-group Hinv diagonal blocks packed
+as hg (G, 16) (= 4×4 flattened; gathered once per layer by ops.py — it's
+O(m) memory vs the O(m²) full Hinv).  Grid (R/br, G/bg).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import NM_COMBOS_24
+
+_COMBO_MASK = np.zeros((6, 4), np.float32)
+for _ci, (_p, _q) in enumerate(np.asarray(NM_COMBOS_24)):
+    _COMBO_MASK[_ci, _p] = _COMBO_MASK[_ci, _q] = 1.0
+
+
+def _nm_select_kernel(w_ref, hg_ref, o_ref, *, bg: int):
+    br = w_ref.shape[0]
+    w = w_ref[...].astype(jnp.float32).reshape(br, bg, 4)
+    hg = hg_ref[...].astype(jnp.float32)              # (bg, 16)
+
+    losses = []
+    for (p, q) in np.asarray(NM_COMBOS_24):
+        app = hg[:, 4 * p + p][None]                  # (1, bg)
+        aqq = hg[:, 4 * q + q][None]
+        apq = hg[:, 4 * p + q][None]
+        wp = w[:, :, p]
+        wq = w[:, :, q]
+        det = app * aqq - apq * apq
+        losses.append(
+            0.5 * (wp * wp * aqq - 2.0 * wp * wq * apq + wq * wq * app) / det)
+    l6 = jnp.stack(losses, axis=-1)                   # (br, bg, 6)
+    best = jnp.argmin(l6, axis=-1)                    # (br, bg)
+    # position f is pruned iff the winning combo contains f — unrolled so
+    # no constant array is captured (Pallas kernels take refs only).
+    combos = np.asarray(NM_COMBOS_24)
+    pos_masks = []
+    for f in range(4):
+        hits = [ci for ci, (p, q) in enumerate(combos) if f in (p, q)]
+        m = (best == hits[0])
+        for ci in hits[1:]:
+            m = m | (best == ci)
+        pos_masks.append(m)
+    mask = jnp.stack(pos_masks, axis=-1)              # (br, bg, 4) bool
+    o_ref[...] = mask.reshape(br, bg * 4).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bg", "interpret"))
+def nm_select(
+    w: jax.Array,
+    hg: jax.Array,
+    *,
+    br: int = 128,
+    bg: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    """w: (R, C) paper orientation, C = 4·G; hg: (G, 16) group Hinv blocks.
+    Returns int8 mask (R, C), 1 = pruned (exactly 2 per group of 4)."""
+    r, c = w.shape
+    g = c // 4
+    if c % 4 or hg.shape != (g, 16):
+        raise ValueError(f"bad shapes w={w.shape} hg={hg.shape}")
+    if r % br or g % bg:
+        raise ValueError(f"({r},{g}) not divisible by ({br},{bg})")
+    grid = (r // br, g // bg)
+    return pl.pallas_call(
+        functools.partial(_nm_select_kernel, bg=bg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bg * 4), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, 16), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bg * 4), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
+        interpret=interpret,
+    )(w, hg)

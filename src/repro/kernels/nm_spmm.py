@@ -1,0 +1,89 @@
+"""2:4-compressed weight × activation matmul (Pallas TPU kernel).
+
+TPU adaptation of GPU 2:4 sparse tensor cores (DESIGN.md §4.2): TPUs have
+no sparse MXU, but 2:4 serving is HBM-bandwidth-bound at decode — so we
+store weights compressed (half the bytes: values (K/2,N) + 2-bit indices,
+carried as int8 here) and *decompress inside VMEM* right before a dense
+MXU matmul.  Weight HBM traffic drops ~1.9× (2.0× values, minus the index
+stream), which is the roofline win for memory-bound decode layers.
+
+Tiling: grid (M/bm, N/bn, K/bk); x tile (bm,bk), compressed tiles
+(bk/2,bn), f32 accumulator tile (bm,bn) revisited along k (innermost,
+sequential on TPU).  Default 128³ dense-equivalent tiles: VMEM ≈
+32KB (x, bf16) + 16KB (vals) + 8KB (idx) + 64KB (acc f32) ≪ v5e VMEM;
+all matmul dims are 128-aligned for the MXU.
+
+In-VMEM decompress is branch-free VPU code:
+  dense[4g + r, n] = Σ_s vals[2g+s, n] · (idx[2g+s, n] == r)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nm_spmm_kernel(x_ref, vals_ref, idx_ref, o_ref, *, bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                # (bm, bk)
+    vals = vals_ref[...]                          # (bk//2, bn)
+    idx = idx_ref[...]                            # (bk//2, bn) int8
+    g = bk // 4
+    bn = vals.shape[-1]
+    v = vals.reshape(g, 2, bn).astype(jnp.float32)
+    ix = idx.reshape(g, 2, bn).astype(jnp.int32)
+    r = jax.lax.broadcasted_iota(jnp.int32, (g, 2, 4, bn), 2)
+    hit = (ix[:, :, None, :] == r).astype(jnp.float32)
+    dense = jnp.sum(v[:, :, None, :] * hit, axis=1).reshape(bk, bn)
+    o_ref[...] += jax.lax.dot(
+        x.astype(jnp.float32), dense,
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def nm_spmm(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ decompress_24(vals, idx).
+
+    x: (M, K); vals/idx: (K/2, N). Returns (M, N) float32.
+    M, K, N must divide by the tile sizes (callers pad).
+    """
+    m, k = x.shape
+    k2, n = vals.shape
+    if k2 * 2 != k:
+        raise ValueError(f"vals rows {k2} != K/2 = {k // 2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k},{n}) not divisible by "
+                         f"tiles ({bm},{bk},{bn})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_nm_spmm_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, vals, idx)

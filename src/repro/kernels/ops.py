@@ -1,0 +1,107 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``INTERPRET`` auto-detects the backend: on this CPU container every
+kernel runs in interpret mode (Python-level execution of the kernel body
+— bit-faithful to the TPU program structure); on TPU they compile to
+Mosaic.  All wrappers handle padding to tile multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attn as _flash
+from repro.kernels.hessian_accum import hessian_accum as _hessian
+from repro.kernels.nm_select import nm_select as _nm_select
+from repro.kernels.nm_spmm import nm_spmm as _nm_spmm
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+# ----------------------------------------------------------------------
+def compress_24(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dense 2:4-sparse (K, N) → packed (vals, idx). See ref.compress_24."""
+    return ref.compress_24(w)
+
+
+def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array,
+              out_dtype=None, block: int = 128) -> jax.Array:
+    """y = x @ w_sparse for packed 2:4 weights; pads all dims to tiles.
+
+    x: (..., K); vals/idx: (K/2, N) → (..., N).
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = vals.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm = min(block, max(8, m))
+    x2p = _pad_to(x2, (bm, block))
+    valsp = _pad_to(vals, (block // 2, block))
+    idxp = _pad_to(idx, (block // 2, block))
+    y = _nm_spmm(x2p, valsp, idxp, bm=bm, bn=block, bk=block,
+                 interpret=INTERPRET)
+    y = y[:m, :n].reshape(*lead, n)
+    return y.astype(out_dtype or x.dtype)
+
+
+def hessian_xxt(x: jax.Array, block: int = 128) -> jax.Array:
+    """H = 2·x·xᵀ for x (m, T) via the streaming kernel (f32)."""
+    m, t = x.shape
+    xp = _pad_to(x, (block, block))
+    h = _hessian(xp, bi=block, bj=block, bt=block, interpret=INTERPRET)
+    return h[:m, :m]
+
+
+def nm_select_mask(w: jax.Array, hinv: jax.Array,
+                   br: int = 128, bg: int = 32) -> jax.Array:
+    """Solution 𝔐 2:4 mask (bool, True = pruned) for paper-orientation w.
+
+    Extracts the (G, 4, 4) group diagonal blocks of Hinv host-side-cheap
+    (O(m) gather) and runs the combo-scoring kernel.
+    """
+    r, c = w.shape
+    g = c // 4
+    cols = (jnp.arange(g) * 4)[:, None] + jnp.arange(4)[None, :]
+    hg = hinv[cols[:, :, None], cols[:, None, :]].reshape(g, 16)
+    brr = min(br, max(8, r))
+    wp = _pad_to(w, (brr, 4 * bg))
+    gp = wp.shape[1] // 4
+    hgp = _pad_to(hg, (bg, 16))
+    # padding groups get identity A (det=1) — harmless, rows sliced off
+    if gp > g:
+        eye = jnp.tile(jnp.eye(4).reshape(1, 16), (gp - g, 1))
+        hgp = hgp.at[g:].set(eye)
+    mask = _nm_select(wp, hgp, br=brr, bg=bg, interpret=INTERPRET)
+    return mask[:r, :c].astype(bool)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, bq: int = 128, bk: int = 128
+              ) -> jax.Array:
+    """Flash attention on (BH, T, D); T padded to tile multiples."""
+    bh, t, d = q.shape
+    bq = min(bq, t) if t % bq == 0 or t < bq else bq
+    tpad = (-t) % max(bq, bk)
+    if tpad:
+        qp = jnp.pad(q, ((0, 0), (0, tpad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, tpad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, tpad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    if qp.shape[1] < bq:
+        bq = bk = qp.shape[1]
+    o = _flash(qp, kp, vp, bq=bq, bk=bk, causal=causal, interpret=INTERPRET)
+    return o[:, :t, :]

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NM_COMBOS_24 = np.array(
+    [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)], dtype=np.int32)
+
+
+# ----------------------------------------------------------------------
+# 2:4 compressed format
+# ----------------------------------------------------------------------
+def compress_24(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dense (K, N) with 2:4 sparsity along K → (vals (K/2,N), idx (K/2,N)).
+
+    Every group of 4 consecutive K-rows holds ≤2 nonzeros per column; the
+    two kept entries' in-group positions go to idx (int8, ascending), the
+    values to vals.  (Groups with <2 nonzeros pad with zeros at unused
+    slots — idx still valid.)
+    """
+    k, n = w.shape
+    assert k % 4 == 0, f"K={k} must divide by 4"
+    g = w.reshape(k // 4, 4, n)
+    nz = (g != 0)
+    # order: nonzeros first (stable by position)
+    rank = jnp.cumsum(nz, axis=1) * nz          # 1,2 at kept slots
+    pos = jnp.arange(4, dtype=jnp.int32)[None, :, None]
+    idx0 = jnp.min(jnp.where(rank == 1, pos, 4), axis=1)
+    idx1 = jnp.min(jnp.where(rank == 2, pos, 4), axis=1)
+    # groups with <2 nonzeros: point the unused slot at position 0 value 0
+    idx0c = jnp.where(idx0 == 4, 0, idx0)
+    idx1c = jnp.where(idx1 == 4, 0, idx1)
+    v0 = jnp.take_along_axis(g, idx0c[:, None, :], axis=1)[:, 0, :]
+    v1 = jnp.take_along_axis(g, idx1c[:, None, :], axis=1)[:, 0, :]
+    v0 = jnp.where(idx0 == 4, 0, v0)
+    v1 = jnp.where(idx1 == 4, 0, v1)
+    vals = jnp.stack([v0, v1], axis=1).reshape(k // 2, n)
+    idx = jnp.stack([idx0c, idx1c], axis=1).reshape(k // 2, n).astype(jnp.int8)
+    return vals, idx
+
+
+def decompress_24(vals: jax.Array, idx: jax.Array) -> jax.Array:
+    """(K/2, N) pairs → dense (K, N)."""
+    k2, n = vals.shape
+    g = k2 // 2
+    v = vals.reshape(g, 2, n)
+    ix = idx.reshape(g, 2, n).astype(jnp.int32)
+    r = jnp.arange(4, dtype=jnp.int32)[None, :, None]       # (1,4,1)
+    dense = jnp.sum(
+        v[:, :, None, :] * (ix[:, :, None, :] == r[:, None, :, :]).astype(
+            vals.dtype),
+        axis=1)                                             # (g,4,n)
+    return dense.reshape(g * 4, n)
+
+
+def nm_spmm_ref(x: jax.Array, vals: jax.Array, idx: jax.Array) -> jax.Array:
+    """y = x @ decompress(vals, idx). x: (M, K); result (M, N) f32."""
+    w = decompress_24(vals, idx)
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+def hessian_accum_ref(x: jax.Array) -> jax.Array:
+    """H = 2 · x xᵀ for x (m, T) — f32."""
+    x32 = x.astype(jnp.float32)
+    return 2.0 * (x32 @ x32.T)
+
+
+# ----------------------------------------------------------------------
+def nm_select_ref(w: jax.Array, hinv: jax.Array) -> jax.Array:
+    """Solution 𝔐 2:4 mask via Eq. (12) — reference (loops over combos).
+
+    w: (R, C) paper orientation; hinv: (C, C). Returns bool mask (R, C),
+    True = pruned, exactly 2 per group of 4.
+    """
+    r, c = w.shape
+    g = c // 4
+    w32 = w.astype(jnp.float32).reshape(r, g, 4)
+    cols = (jnp.arange(g) * 4)[:, None] + jnp.arange(4)[None, :]
+    hg = hinv[cols[:, :, None], cols[:, None, :]].astype(jnp.float32)  # (g,4,4)
+    losses = []
+    for (p, q) in np.asarray(NM_COMBOS_24):
+        app = hg[:, p, p][None]
+        aqq = hg[:, q, q][None]
+        apq = hg[:, p, q][None]
+        wp = w32[:, :, p]
+        wq = w32[:, :, q]
+        det = app * aqq - apq * apq
+        loss = 0.5 * (wp * wp * aqq - 2 * wp * wq * apq + wq * wq * app) / det
+        losses.append(loss)
+    losses = jnp.stack(losses, axis=-1)                      # (r,g,6)
+    best = jnp.argmin(losses, axis=-1)                       # (r,g)
+    combo_mask = np.zeros((6, 4), bool)
+    for ci, (p, q) in enumerate(np.asarray(NM_COMBOS_24)):
+        combo_mask[ci, p] = combo_mask[ci, q] = True
+    mask = jnp.asarray(combo_mask)[best]                     # (r,g,4)
+    return mask.reshape(r, c)
+
+
+# ----------------------------------------------------------------------
+def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True) -> jax.Array:
+    """q,k,v: (BH, T, D). Plain softmax attention — f32 output."""
+    bh, t, d = q.shape
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))

@@ -1,0 +1,305 @@
+"""Analytic FLOPs / HBM-byte model for the roofline (§Roofline).
+
+Why analytic: XLA's CPU-backend ``cost_analysis()`` counts while-loop
+bodies ONCE (verified: a 2-layer and an 8-layer scanned model report
+identical flops), so scanned-layer models under-report by ~num_layers.
+The dry-run therefore reports BOTH: (a) these closed-form counts (used
+for the roofline terms), and (b) the HLO numbers extrapolated from
+k=1 / k=2 unrolled-depth compiles (collectives — exact, since cost is
+affine in depth; see launch/dryrun.py).
+
+Conventions:
+  - matmul = 2·m·n·k flops; train = fwd + 2×bwd (+1 fwd when remat=full);
+  - causal attention context Σ_t ctx(t) = T(T+1)/2, windowed ≈ Σ min(t+1,w);
+  - MoE: top_k (+shared) experts per token for flops; weight *traffic*
+    counts every expert the batch plausibly touches;
+  - bytes are per-step HBM traffic estimates: weights + optimizer state +
+    activations (c_act·B·T·d per layer R/W) + logits + KV/state caches.
+All numbers are GLOBAL; divide by chip count for per-device terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.base import ArchConfig
+
+BF16 = 2
+F32 = 4
+
+
+# ----------------------------------------------------------------------
+# per-token weight-matmul sizes (Σ m·n over the block's linears)
+# ----------------------------------------------------------------------
+def _attn_weights(cfg: ArchConfig) -> float:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return 2 * d * h * hd + 2 * d * kv * hd
+
+
+def _ffn_weights(cfg: ArchConfig) -> float:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return 3 * cfg.d_model * cfg.d_ff
+    if cfg.mlp_kind == "gelu":
+        return 2 * cfg.d_model * cfg.d_ff
+    return 0.0
+
+
+def _moe_weights_per_token(cfg: ArchConfig) -> float:
+    mc = cfg.moe
+    d, fe = cfg.d_model, mc.d_ff_expert
+    per_expert = 3 * d * fe
+    return (mc.top_k + mc.num_shared) * per_expert + d * mc.num_experts
+
+
+def _mamba_weights(cfg: ArchConfig) -> float:
+    d, di, n, r, ck = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.dt_rank, cfg.ssm_conv)
+    return (2 * d * di + di * ck + di * (r + 2 * n) + r * di + di * d)
+
+
+def _mlstm_weights(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    di = cfg.mlstm_proj * d
+    return 4 * d * di + 2 * d * cfg.num_heads
+
+
+def _slstm_weights(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    return 5 * d * d + 4 * d * hd
+
+
+_MIXER_WEIGHTS = {
+    "attn": _attn_weights, "attn_local": _attn_weights,
+    "enc_attn": _attn_weights,
+    "mamba": _mamba_weights, "mlstm": _mlstm_weights,
+    "slstm": _slstm_weights,
+}
+
+
+def _ctx_sum(t: int, window=None, impl: str = "dense") -> float:
+    """Σ_t effective-context for the attention score matmuls over T.
+
+    impl='dense':  baseline _sdpa/_sdpa_online — FULL (t,s) score matrix,
+                   masked entries still burn MXU ⇒ Σ = t².
+    impl='banded': _sdpa_banded for windowed layers (Σ ≈ t·(chunk+w)),
+                   causal layers still dense.
+    impl='flash':  block-skipping flash kernel — causal Σ = t(t+1)/2,
+                   windowed capped at the band.
+    """
+    if impl == "dense" or (impl == "banded" and window is None):
+        return float(t) * t
+    if impl == "banded":
+        from repro.models.layers import ONLINE_ATTN_CHUNK
+        return float(t) * min(t, window + ONLINE_ATTN_CHUNK)
+    if window is None or window >= t:
+        return t * (t + 1) / 2
+    w = window
+    return w * (w + 1) / 2 + (t - w) * w
+
+
+def _block_flops_per_seq(cfg: ArchConfig, kind: str, is_moe: bool,
+                         b: int, t: int, mode: str, s_ctx: int,
+                         attn_impl: str = "dense") -> float:
+    """Forward flops of ONE block over a (b, t) slab.
+
+    mode: 'seq' (train/prefill over t tokens) or 'decode' (t==1 against
+    an s_ctx-deep history)."""
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    tokens = b * t
+    fl = 0.0
+    if kind in ("attn", "attn_local", "enc_attn", "dec_attn"):
+        fl += 2 * tokens * _attn_weights(cfg)
+        window = cfg.window if kind == "attn_local" else None
+        if mode == "seq":
+            csum = (t * t if kind == "enc_attn"
+                    else _ctx_sum(t, window, attn_impl))
+            fl += 4 * b * csum * h * hd
+        else:
+            ctx = min(window, s_ctx) if window else s_ctx
+            fl += 4 * b * ctx * h * hd
+        if kind == "dec_attn":   # cross attention (xq/xo per dec token,
+            fl += 2 * tokens * (d * h * hd + h * hd * d)
+            fl += 4 * tokens * cfg.frontend_len * h * hd   # scores vs enc
+            if mode == "seq":    # xk/xv computed once per sequence
+                fl += 2 * b * cfg.frontend_len * (2 * d * kv * hd)
+    elif kind == "mamba":
+        fl += 2 * tokens * _mamba_weights(cfg)
+        fl += 9 * tokens * cfg.d_inner * cfg.ssm_state      # selective scan
+    elif kind == "mlstm":
+        di = cfg.mlstm_proj * d
+        fl += 2 * tokens * _mlstm_weights(cfg)
+        if mode == "seq":
+            from repro.models.ssm import MLSTM_CHUNK, MLSTM_CHUNK_THRESHOLD
+            if t > MLSTM_CHUNK_THRESHOLD:
+                # chunkwise form: intra-chunk t·C scores + inter-chunk
+                # state read/write per chunk
+                ctx = t * MLSTM_CHUNK + (t // MLSTM_CHUNK) * 3 * (
+                    di // cfg.num_heads)
+            else:
+                ctx = _ctx_sum(t, None, attn_impl)
+            fl += 4 * b * ctx * di
+        else:
+            fl += 6 * b * di * (di // cfg.num_heads)        # state update
+    elif kind == "slstm":
+        fl += 2 * tokens * _slstm_weights(cfg)
+        fl += 12 * tokens * d                               # gates/state
+    if cfg.block_has_mlp(kind):
+        if is_moe:
+            fl += 2 * tokens * _moe_weights_per_token(cfg)
+        else:
+            fl += 2 * tokens * _ffn_weights(cfg)
+    return fl
+
+
+def flops_forward(cfg: ArchConfig, b: int, t: int, mode: str = "seq",
+                  s_ctx: int = 0, attn_impl: str = "dense") -> float:
+    """Global forward flops of one step (train fwd / prefill / decode)."""
+    fl = 0.0
+    for i, kind in enumerate(cfg.prefix):
+        fl += _block_flops_per_seq(cfg, kind, cfg.slot_is_moe(i, True),
+                                   b, t, mode, s_ctx, attn_impl)
+    for j, kind in enumerate(cfg.period):
+        fl += cfg.n_periods * _block_flops_per_seq(
+            cfg, kind, cfg.slot_is_moe(j, False), b, t, mode, s_ctx,
+            attn_impl)
+    if cfg.encdec and mode != "decode":
+        f = cfg.frontend_len
+        fl += cfg.enc_layers * _block_flops_per_seq(
+            cfg, "enc_attn", False, b, f, "seq", 0, attn_impl)
+    fl += 2 * b * t * cfg.d_model * cfg.vocab_size          # lm head
+    return fl
+
+
+# ----------------------------------------------------------------------
+def _params_bytes(cfg: ArchConfig, touched_experts_per_layer=None) -> float:
+    """Weight bytes touched in one pass (MoE: only routed experts)."""
+    from repro.models.transformer import LM
+    counts = LM(cfg).param_counts()
+    total_b = counts["total"] * BF16
+    if cfg.moe is None or touched_experts_per_layer is None:
+        return total_b
+    mc = cfg.moe
+    frac = min(1.0, touched_experts_per_layer / mc.num_experts)
+    # split expert vs non-expert params analytically
+    n_moe_layers = sum(
+        1 for j in range(len(cfg.period)) if cfg.slot_is_moe(j, False)
+    ) * cfg.n_periods + sum(
+        1 for i in range(len(cfg.prefix)) if cfg.slot_is_moe(i, True))
+    expert_params = (n_moe_layers * mc.num_experts * 3
+                     * cfg.d_model * mc.d_ff_expert)
+    rest = counts["total"] - expert_params
+    return (rest + expert_params * frac) * BF16
+
+
+def _cache_bytes(cfg: ArchConfig, b: int, s: int) -> float:
+    """Decode-cache bytes read per step (KV up to pos + states)."""
+    by = 0.0
+    all_kinds = ([(k, True) for k in cfg.prefix]
+                 + [(k, False) for k in cfg.period] * cfg.n_periods)
+    for kind, _ in all_kinds:
+        if kind in ("attn", "attn_local", "dec_attn"):
+            window = cfg.window if kind == "attn_local" else None
+            ctx = min(window, s) if window else s
+            by += 2 * b * ctx * cfg.num_kv_heads * cfg.hd * BF16
+            if kind == "dec_attn":
+                by += 2 * b * cfg.frontend_len * cfg.num_kv_heads \
+                    * cfg.hd * BF16
+        elif kind == "mamba":
+            by += b * cfg.d_inner * (cfg.ssm_state * F32 * 2
+                                     + cfg.ssm_conv * F32)
+        elif kind == "mlstm":
+            di = cfg.mlstm_proj * cfg.d_model
+            hd = di // cfg.num_heads
+            by += 2 * b * di * hd * F32
+        elif kind == "slstm":
+            by += 8 * b * cfg.d_model * F32
+    return by
+
+
+# activation-traffic constant: ~12 intermediate (B,T,d) tensors read+
+# written per block in a fused TPU program (norms, projections, residual,
+# gate products) — a calibrated engineering estimate, documented in
+# EXPERIMENTS.md §Roofline.
+C_ACT = 24
+
+
+def bytes_step(cfg: ArchConfig, b: int, t: int, mode: str,
+               s_ctx: int = 0, moment_bytes: int = BF16) -> Dict[str, float]:
+    """Global HBM bytes of one step, split by source (see module doc).
+
+    Returns {"total", "weights", "cache", "act", "logits", "opt"}."""
+    nl = cfg.num_layers + (cfg.enc_layers if cfg.encdec else 0)
+    d = cfg.d_model
+    act = C_ACT * b * t * d * BF16 * nl
+    logits = 3 * b * t * cfg.vocab_size * BF16 if mode != "decode" else \
+        3 * b * cfg.vocab_size * BF16
+    if mode == "train":
+        p = _params_bytes(cfg)                 # all experts get grads
+        n_params = p / BF16
+        weights = (3 * p if cfg.remat == "full" else 2 * p) + p  # + grads
+        opt = 4 * n_params * moment_bytes + p  # m,v R/W + param write
+        scores = _scores_bytes(cfg, b, t)
+        return {"total": weights + opt + 3 * act + logits + scores,
+                "weights": weights, "cache": 0.0, "act": 3 * act + scores,
+                "logits": logits, "opt": opt}
+    if mode == "prefill":
+        p = _params_bytes(cfg)
+        cache_w = _cache_bytes(cfg, b, t)      # write K/V once
+        sc = _scores_bytes(cfg, b, t)
+        return {"total": p + act + logits + cache_w + sc,
+                "weights": p, "cache": cache_w, "act": act + sc,
+                "logits": logits, "opt": 0.0}
+    # decode
+    touched = (b * cfg.moe.top_k + cfg.moe.num_shared) if cfg.moe else None
+    p = _params_bytes(cfg, touched_experts_per_layer=touched)
+    cache = _cache_bytes(cfg, b, s_ctx)
+    act_d = C_ACT * b * d * BF16 * nl
+    return {"total": p + cache + act_d + logits,
+            "weights": p, "cache": cache, "act": act_d,
+            "logits": logits, "opt": 0.0}
+
+
+def _scores_bytes(cfg: ArchConfig, b: int, t: int) -> float:
+    """Attention-score traffic for seq modes (online-softmax tiles: the
+    (t, chunk) tiles stay in VMEM — count K/V re-reads per chunk pass)."""
+    by = 0.0
+    for kind in list(cfg.prefix) + list(cfg.period) * cfg.n_periods:
+        if kind in ("attn", "attn_local", "dec_attn", "enc_attn"):
+            by += 2 * b * t * cfg.num_kv_heads * cfg.hd * BF16
+    return by
+
+
+# 2:4-packed weights: values at half count + int8 indices (2-bit on TPU)
+SPARSE_24_WEIGHT_FACTOR = 0.5625
+
+
+def analytic_cell(cfg: ArchConfig, shape_kind: str, b: int, t: int,
+                  attn_impl: str = "dense",
+                  sparse_24: bool = False) -> Dict[str, float]:
+    """All analytic numbers for a dry-run cell (GLOBAL totals).
+
+    ``sparse_24``: serve the paper's 2:4-pruned weights through the
+    nm_spmm packed format — weight HBM traffic × 0.5625."""
+    if shape_kind == "train":
+        fwd = flops_forward(cfg, b, t, "seq", attn_impl=attn_impl)
+        mult = 4.0 if cfg.remat == "full" else 3.0
+        by = bytes_step(cfg, b, t, "train")
+        return {"flops": mult * fwd, "bytes": by["total"],
+                "bytes_split": by}
+    if shape_kind == "prefill":
+        by = bytes_step(cfg, b, t, "prefill")
+        total = by["total"]
+        if sparse_24:
+            total -= by["weights"] * (1 - SPARSE_24_WEIGHT_FACTOR)
+        return {"flops": flops_forward(cfg, b, t, "seq",
+                                       attn_impl=attn_impl),
+                "bytes": total, "bytes_split": by}
+    by = bytes_step(cfg, b, 1, "decode", s_ctx=t)
+    total = by["total"]
+    if sparse_24:
+        total -= by["weights"] * (1 - SPARSE_24_WEIGHT_FACTOR)
+    return {"flops": flops_forward(cfg, b, 1, "decode", s_ctx=t),
+            "bytes": total, "bytes_split": by}

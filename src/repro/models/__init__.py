@@ -1,0 +1,6 @@
+"""Model zoo: ArchConfig-driven LM assembly over a shared layer library."""
+
+from repro.models.base import ArchConfig, MoEConfig
+from repro.models.transformer import LM, block_apply, block_cache_init
+
+__all__ = ["ArchConfig", "MoEConfig", "LM", "block_apply", "block_cache_init"]

@@ -1,0 +1,498 @@
+"""Layer library: norms, rope, GQA attention, gated MLPs, embeddings.
+
+Conventions:
+  - params are plain nested dicts; linear kernels are stored (in, out);
+  - every apply takes ``caps``: ``None`` for the fast path, or a dict that
+    collects each linear's INPUT under the linear's name (the pruning
+    engine's calibration capture — see core.calibration);
+  - hidden states are (B, T, D); attention caches are (B, S_max, KV, hd).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# Param init helpers
+# ----------------------------------------------------------------------
+def _dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def linear(x, w, b=None, *, caps=None, name=""):
+    """y = x @ w (+ b), recording the input under ``name`` when capturing.
+
+    ``w`` may be a 2:4-packed dict {"vals", "idx"} (serve.sparse) — then
+    the matmul dispatches to the nm_spmm Pallas kernel, which decompresses
+    in VMEM and runs a dense MXU matmul off half the weight HBM traffic.
+    """
+    if caps is not None and name:
+        caps[name] = x
+    if isinstance(w, dict):
+        from repro.kernels import ops as _kops
+        y = _kops.nm_matmul(x, w["vals"], w["idx"], out_dtype=x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------------
+# Norms / rope
+# ----------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., T, n, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., T, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention block (GQA, optional qk-norm / bias / sliding window)
+# ----------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig, dtype) -> Params:
+    hd, h, kv, d = cfg.hd, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": rmsnorm_init(d, dtype),
+        "wq": _dense_init(ks[0], d, h * hd, dtype),
+        "wk": _dense_init(ks[1], d, kv * hd, dtype),
+        "wv": _dense_init(ks[2], d, kv * hd, dtype),
+        "wo": _dense_init(ks[3], h * hd, d, dtype,
+                          scale=1.0 / math.sqrt(h * hd * 2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _qkv(p, h_in, cfg: ArchConfig, positions, caps, prefix,
+         seq_par_ok: bool = True):
+    b, t, _ = h_in.shape
+    hd, nh, kv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    q = linear(h_in, p["wq"], p.get("bq"), caps=caps, name=f"{prefix}wq")
+    k = linear(h_in, p["wk"], p.get("bk"), caps=caps, name=f"{prefix}wk")
+    v = linear(h_in, p["wv"], p.get("bv"), caps=caps, name=f"{prefix}wv")
+    q = q.reshape(b, t, nh, hd)
+    k = k.reshape(b, t, kv, hd)
+    v = v.reshape(b, t, kv, hd)
+    if SEQ_PAR_ATTN and seq_par_ok and t >= SEQ_PAR_MIN_T:
+        # reshard head→sequence parallelism BEFORE rope/qk-norm, so the
+        # per-position elementwise ops never touch head-sharded tensors
+        q = _seq_constrain(q)
+        k = _seq_constrain(k)
+        v = _seq_constrain(v)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:  # rope
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, nh, kv):
+    """Grouped scaled-dot-product attention.
+
+    q: (B,T,H,hd), k/v: (B,S,KV,hd), mask: broadcastable to (B,KV,G,T,S).
+    """
+    b, t, _, hd = q.shape
+    g = nh // kv
+    qg = q.reshape(b, t, kv, g, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, nh * hd)
+
+
+# full-sequence attention switches to the online-softmax path when the
+# score matrix would exceed this many elements per (T,S) pair — 32k
+# prefill would otherwise materialize T² scores (flash-attention
+# algorithm, expressed as a lax.scan over KV chunks so it stays
+# SPMD-partitionable in the dry-run; the Pallas kernel is the TPU
+# drop-in for the same math).
+ONLINE_ATTN_THRESHOLD = 8192
+ONLINE_ATTN_CHUNK = 1024
+# §Perf iteration (beyond-paper): sliding-window layers compute only the
+# (chunk, chunk+window) band instead of the full (T, S) score matrix —
+# T·(chunk+w) score work, a ~16× cut for gemma3's 1024-window locals at
+# 32k. Off by default so the baseline roofline reflects the naive path.
+BANDED_LOCAL_ATTN = False
+
+# §Perf iteration (beyond-paper): sequence-parallel long attention.
+# With GQA kv-heads < TP degree, GSPMD shards q/k/v on head_dim and the
+# score contraction emits an all-reduce INSIDE the KV-chunk scan —
+# ×(chunks × layers) on the wire (the dominant baseline cost at 32k
+# prefill). Constraining q/k/v to be sharded on the SEQUENCE dim over
+# the model axis makes every score matmul local; the only traffic is
+# streaming each (small) KV chunk to all shards.
+SEQ_PAR_ATTN = False
+SEQ_PAR_MIN_T = 2048      # apply to train-length sequences too
+
+
+def _seq_constrain(x, seq_dim=1):
+    """Shard dim0 over the data axes and ``seq_dim`` over model (active
+    mesh only — no-op in single-device tests)."""
+    from repro.dist.api import constrain, current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    tp = ctx.mesh.shape[ctx.tp_axis]
+    if x.shape[seq_dim] % tp or x.shape[0] % ctx.dp:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    spec[seq_dim] = ctx.tp_axis
+    return constrain(x, *spec)
+
+
+def _dp_only_constrain(x):
+    """Batch-sharded, replicated over model — one explicit all-gather."""
+    from repro.dist.api import constrain, current_ctx
+    ctx = current_ctx()
+    if ctx is None or x.shape[0] % ctx.dp:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    return constrain(x, *spec)
+
+
+def _sdpa_banded(q, k, v, nh, kv, window, chunk=ONLINE_ATTN_CHUNK):
+    """Windowed causal grouped attention over the diagonal band only."""
+    b, t, _, hd = q.shape
+    g = nh // kv
+    assert t % chunk == 0, f"T={t} % chunk={chunk}"
+    nq = t // chunk
+    band = chunk + window
+    if band >= t:            # window covers everything — no banding win
+        mask = causal_mask(t, t, window)
+        return _sdpa(q, k, v, mask, nh, kv)
+    # banded layers: leave sharding entirely to GSPMD — q seq-sharded
+    # re-gathers all of q per chunk step (5×275GB measured), and even
+    # explicit once-per-layer K/V gathers cost 45×537MB; head-parallel
+    # banded attention needs neither (gemma3: 16 q-heads = TP)
+    qg = (q.reshape(b, t, kv, g, hd).astype(jnp.float32)
+          / math.sqrt(hd))
+    qs = jnp.moveaxis(qg.reshape(b, nq, chunk, kv, g, hd), 1, 0)
+
+    def body(_, xs):
+        qc, ci = xs                       # qc: (b, chunk, kv, g, hd)
+        start = jnp.maximum(ci * chunk - window, 0)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kpos = start + jnp.arange(band, dtype=jnp.int32)
+        qpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = ((kpos[None, :] <= qpos[:, None])
+              & (kpos[None, :] > qpos[:, None] - window))
+        sc = jnp.einsum("bckgd,bskd->bkgcs", qc, kc.astype(jnp.float32))
+        sc = jnp.where(ok[None, None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        oc = jnp.einsum("bkgcs,bskd->bckgd", p, vc.astype(jnp.float32))
+        return None, oc
+
+    _, outs = jax.lax.scan(
+        body, None, (qs, jnp.arange(nq, dtype=jnp.int32)))
+    out = jnp.moveaxis(outs, 0, 1)        # (b, nq, chunk, kv, g, hd)
+    return out.reshape(b, t, nh * hd).astype(v.dtype)
+
+
+def _sdpa_online(q, k, v, nh, kv, *, window=None, prefix_len=None,
+                 chunk=ONLINE_ATTN_CHUNK):
+    """Causal grouped attention via online softmax over KV chunks.
+
+    Same semantics as _sdpa with a causal (+window/prefix) mask, but
+    peak memory is O(T·chunk) instead of O(T·S).
+    """
+    b, t, _, hd = q.shape
+    g = nh // kv
+    s = k.shape[1]
+    assert s % chunk == 0, f"S={s} not divisible by chunk={chunk}"
+    nck = s // chunk
+    if SEQ_PAR_ATTN:
+        q = _seq_constrain(q)
+        # gather K/V across the model axis ONCE per layer (explicit AG);
+        # otherwise the chunk scan's dynamic-slice over a seq-sharded
+        # operand re-gathers the full K/V every iteration (measured:
+        # 2×268MB × chunks × layers — the dominant baseline wire cost)
+        k = _dp_only_constrain(k)
+        v = _dp_only_constrain(v)
+    qg = (q.reshape(b, t, kv, g, hd).astype(jnp.float32)
+          / math.sqrt(hd))
+    ks = jnp.moveaxis(k.reshape(b, nck, chunk, kv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nck, chunk, kv, hd), 1, 0)
+    qpos = jnp.arange(t, dtype=jnp.int32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, ci = xs
+        kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = kpos[None, :] <= qpos[:, None]                  # (t, chunk)
+        if window is not None:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        if prefix_len is not None:
+            ok |= kpos[None, :] < prefix_len
+        sc = jnp.einsum("btkgd,bckd->bkgtc", qg,
+                        kc.astype(jnp.float32))              # (b,kv,g,t,c)
+        sc = jnp.where(ok[None, None, None], sc, -jnp.inf)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        # avoid NaN from (-inf) - (-inf) on fully-masked rows
+        msafe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - msafe[..., None])
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - msafe), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgtc,bckd->bkgtd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, g, t), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, t), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, t, hd), jnp.float32)
+    if SEQ_PAR_ATTN:
+        # keep the online-softmax carries sequence-sharded too, or XLA
+        # reshards (b,kv,g,t[,hd]) between chunk steps inside the scan
+        m0 = _seq_constrain(m0, seq_dim=3)
+        l0 = _seq_constrain(l0, seq_dim=3)
+        a0 = _seq_constrain(a0, seq_dim=3)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (ks, vs, jnp.arange(nck, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1)                            # (b,t,kv,g,hd)
+    return out.reshape(b, t, nh * hd).astype(v.dtype)
+
+
+def causal_mask(t, s, window: Optional[int] = None, offset: int = 0,
+                prefix_len: Optional[int] = None):
+    """(T,S) boolean mask. offset = absolute position of query 0;
+    prefix_len = leading bidirectional prefix (VLM prefix-LM)."""
+    qpos = jnp.arange(t)[:, None] + offset
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    if prefix_len is not None:
+        ok |= kpos < prefix_len
+    return ok[None, None, None]  # (1,1,1,T,S)
+
+
+def attn_apply(
+    p: Params,
+    h: jax.Array,
+    cfg: ArchConfig,
+    *,
+    kind: str = "attn",
+    caps=None,
+    cache: Optional[Params] = None,
+    pos=None,
+    prefix: str = "attn.",
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+    prefix_len: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Pre-norm attention with residual. Returns (h_out, new_cache).
+
+    Modes:
+      full-sequence (cache=None): causal over T (optionally windowed);
+                     ``causal=False`` = encoder self-attention;
+                     ``prefix_len`` = bidirectional prefix (VLM prefix-LM);
+      decode        (cache given): h is (B,1,D), writes K/V at ``pos`` and
+                     attends over positions <= pos;
+      cross         (cross_kv given): encoder-decoder cross attention —
+                     no cache update, no rope, full visibility.
+    """
+    window = cfg.window if kind == "attn_local" else None
+    b, t, _ = h.shape
+    nh, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    h_in = rmsnorm(p["ln"], h, cfg.norm_eps)
+
+    if cross_kv is not None:
+        q = linear(h_in, p["wq"], p.get("bq"), caps=caps, name=f"{prefix}wq")
+        q = q.reshape(b, t, nh, hd)
+        k, v = cross_kv
+        s = k.shape[1]
+        mask = jnp.ones((1, 1, 1, t, s), bool)
+        out = _sdpa(q, k, v, mask, nh, kv)
+        y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
+        return h + y, cache
+
+    if cache is None or t > 1:
+        positions = jnp.arange(t)[None, :]
+        banded = (BANDED_LOCAL_ATTN and causal and window is not None
+                  and prefix_len is None and t > ONLINE_ATTN_THRESHOLD)
+        q, k, v = _qkv(p, h_in, cfg, positions, caps, prefix,
+                       seq_par_ok=not banded)
+        if (BANDED_LOCAL_ATTN and causal and window is not None
+                and prefix_len is None and t > ONLINE_ATTN_THRESHOLD):
+            out = _sdpa_banded(q, k, v, nh, kv, window)
+        elif causal and t > ONLINE_ATTN_THRESHOLD:
+            out = _sdpa_online(q, k, v, nh, kv, window=window,
+                               prefix_len=prefix_len)
+        else:
+            if SEQ_PAR_ATTN and t >= SEQ_PAR_MIN_T:
+                # q rows stay seq-sharded; K/V gathered once per layer
+                k = _dp_only_constrain(k)
+                v = _dp_only_constrain(v)
+            if causal:
+                mask = causal_mask(t, t, window, prefix_len=prefix_len)
+            else:
+                mask = jnp.ones((1, 1, 1, t, t), bool)
+            out = _sdpa(q, k, v, mask, nh, kv)
+        y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
+        if cache is None:
+            return h + y, None
+        # prefill: write the prompt's K/V into cache[0:t]
+        new_cache = dict(cache)
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        return h + y, new_cache
+
+    # decode: t == 1
+    positions = jnp.full((b, t), pos, dtype=jnp.int32)
+    q, k1, v1 = _qkv(p, h_in, cfg, positions, caps, prefix)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k1.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v1.astype(cache["v"].dtype), (0, pos, 0, 0))
+    s = k_cache.shape[1]
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos <= pos
+    if window is not None:
+        ok &= kpos > pos - window
+    if prefix_len is not None:
+        ok |= kpos < prefix_len
+    mask = ok[:, None, None, None, :]  # (1,1,1,1,S) broadcast over T=1
+    out = _sdpa(q, k_cache, v_cache, mask, nh, kv)
+    y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
+    new_cache = dict(cache)
+    new_cache["k"] = k_cache
+    new_cache["v"] = v_cache
+    return h + y, new_cache
+
+
+def attn_cache_init(cfg: ArchConfig, batch, max_len, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# Dense MLP (swiglu / geglu / gelu)
+# ----------------------------------------------------------------------
+def mlp_init(key, cfg: ArchConfig, dtype, d_ff=None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln": rmsnorm_init(d, dtype),
+        "wi": _dense_init(ks[0], d, f, dtype),
+        "wo": _dense_init(ks[1], f, d, dtype,
+                          scale=1.0 / math.sqrt(f * 2 * cfg.num_layers)),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wg"] = _dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp_apply(p, h, cfg: ArchConfig, *, caps=None, prefix="mlp."):
+    h_in = rmsnorm(p["ln"], h, cfg.norm_eps)
+    up = linear(h_in, p["wi"], caps=caps, name=f"{prefix}wi")
+    if cfg.mlp_kind == "swiglu":
+        gate = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg")
+        act = jax.nn.silu(gate) * up
+    elif cfg.mlp_kind == "geglu":
+        gate = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg")
+        act = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        act = jax.nn.gelu(up, approximate=True)
+    y = linear(act, p["wo"], caps=caps, name=f"{prefix}wo")
+    return h + y
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def embed_init(key, cfg: ArchConfig, dtype) -> Params:
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dtype)}
+    if cfg.frontend is not None:
+        k2 = jax.random.fold_in(key, 1)
+        p["frontend_proj"] = _dense_init(k2, cfg.frontend_dim, cfg.d_model, dtype)
+    return p
+
+
+def embed_apply(p, tokens, cfg: ArchConfig):
+    h = p["tok"][tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def frontend_apply(p, feats, cfg: ArchConfig):
+    """Stub modality frontend: project precomputed patch/frame embeddings."""
+    return feats.astype(p["frontend_proj"].dtype) @ p["frontend_proj"]
+
+
+def unembed_init(key, cfg: ArchConfig, dtype) -> Params:
+    p = {"ln": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(key, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+# §Perf iteration 1b: GSPMD leaves h feature-sharded entering the LM
+# head, so the vocab-parallel matmul contracts a sharded dim and
+# all-reduces the full f32 LOGITS (40GB/dev at 4k×256×152k) — plus the
+# mirrored all-gather in the backward. Gathering h (bf16, ~0.5GB) first
+# makes the head a clean column-parallel matmul. Off by default
+# (baseline faithfulness); enabled by OptFlags.fsdp_embed_fix.
+HEAD_GATHER = False
+
+
+def unembed_apply(p, embed_p, h, cfg: ArchConfig):
+    h = rmsnorm(p["ln"], h, cfg.norm_eps)
+    if HEAD_GATHER:
+        h = _dp_only_constrain(h)
+    if cfg.tie_embeddings:
+        return h @ embed_p["tok"].T.astype(h.dtype)
+    return h @ p["head"].astype(h.dtype)

@@ -1,0 +1,766 @@
+"""The model zoo's LM assembly: any ArchConfig → trainable/servable model.
+
+One class (:class:`LM`) covers all 10 assigned architectures:
+decoder-only transformers (dense / MoE / local-global interleave),
+Mamba & xLSTM SSM stacks, the Jamba hybrid, the PaliGemma prefix-LM VLM,
+and the SeamlessM4T encoder-decoder — by composing block *kinds* from
+layers.py / ssm.py / moe.py per the config's prefix/period layout.
+
+HLO discipline: the repeated period is a ``lax.scan`` over stacked layer
+params, so the lowered module is O(one period) regardless of depth (61-
+layer Kimi lowers as fast as 18-layer Gemma).  Capture mode (the pruning
+engine) runs the same blocks *unrolled* — tiny CPU models only.
+
+Entry points:
+  init(key) / init_shapes()             params (concrete / ShapeDtypeStruct)
+  forward(params, batch)                logits, aux-loss
+  loss_fn(params, batch)                scalar loss + metrics (train_step)
+  init_cache(batch, max_len)            decode cache pytree
+  prefill(params, batch, cache)         prompt → logits, filled cache
+  decode_step(params, token, cache, pos)   one-token serve_step
+  prunable_segments() / first_hidden()  core.engine contract
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import LinearSpec, SegmentSpec
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.base import ArchConfig
+from repro.models.layers import (
+    Params,
+    attn_apply,
+    attn_cache_init,
+    attn_init,
+    embed_apply,
+    embed_init,
+    frontend_apply,
+    linear,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed_apply,
+    unembed_init,
+)
+from repro.utils.trees import tree_slice_layer
+
+MIXER_KINDS = ("attn", "attn_local", "enc_attn", "dec_attn",
+               "mamba", "mlstm", "slstm")
+
+
+# ======================================================================
+# Block init / apply dispatch
+# ======================================================================
+def _block_init(key, cfg: ArchConfig, kind: str, is_moe: bool, dtype) -> Params:
+    k_mix, k_ffn, k_x = jax.random.split(key, 3)
+    p: Params = {}
+    if kind in ("attn", "attn_local", "enc_attn"):
+        p["attn"] = attn_init(k_mix, cfg, dtype)
+    elif kind == "dec_attn":
+        p["attn"] = attn_init(k_mix, cfg, dtype)
+        p["xattn"] = attn_init(k_x, cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm_lib.mamba_init(k_mix, cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = ssm_lib.mlstm_init(k_mix, cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = ssm_lib.slstm_init(k_mix, cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.block_has_mlp(kind):
+        if is_moe:
+            p["moe"] = moe_lib.moe_init(k_ffn, cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(k_ffn, cfg, dtype)
+    return p
+
+
+def block_apply(
+    cfg: ArchConfig,
+    kind: str,
+    p: Params,
+    h: jax.Array,
+    *,
+    is_moe: bool = False,
+    caps=None,
+    cache: Optional[Params] = None,
+    pos=None,
+    enc_out: Optional[jax.Array] = None,
+    prefix_len: Optional[int] = None,
+    name_prefix: str = "",
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Apply one block (mixer + optional FFN). Returns (h, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    np_ = name_prefix
+    if kind in ("attn", "attn_local", "enc_attn"):
+        h, cache = attn_apply(
+            p["attn"], h, cfg, kind=kind, caps=caps, cache=cache, pos=pos,
+            prefix=f"{np_}attn.", causal=(kind != "enc_attn"),
+            prefix_len=prefix_len)
+    elif kind == "dec_attn":
+        h, cache = attn_apply(
+            p["attn"], h, cfg, caps=caps, cache=cache, pos=pos,
+            prefix=f"{np_}attn.")
+        # cross attention over the encoder output
+        if cache is not None and enc_out is None:
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            b, s, _ = enc_out.shape
+            kvh, hd = cfg.num_kv_heads, cfg.hd
+            xk = linear(enc_out, p["xattn"]["wk"], caps=caps,
+                        name=f"{np_}xattn.wk").reshape(b, s, kvh, hd)
+            xv = linear(enc_out, p["xattn"]["wv"], caps=caps,
+                        name=f"{np_}xattn.wv").reshape(b, s, kvh, hd)
+            if cache is not None:          # prefill: store cross K/V
+                cache = dict(cache)
+                cache["xk"], cache["xv"] = (
+                    xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype))
+        h, cache = attn_apply(
+            p["xattn"], h, cfg, caps=caps, cache=cache,
+            cross_kv=(xk, xv), prefix=f"{np_}xattn.")
+    elif kind == "mamba":
+        h, cache = ssm_lib.mamba_apply(
+            p["mamba"], h, cfg, caps=caps, cache=cache, pos=pos,
+            prefix=f"{np_}mamba.")
+    elif kind == "mlstm":
+        h, cache = ssm_lib.mlstm_apply(
+            p["mlstm"], h, cfg, caps=caps, cache=cache, pos=pos,
+            prefix=f"{np_}mlstm.")
+    elif kind == "slstm":
+        h, cache = ssm_lib.slstm_apply(
+            p["slstm"], h, cfg, caps=caps, cache=cache, pos=pos,
+            prefix=f"{np_}slstm.")
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if "moe" in p:
+        h, aux = moe_lib.moe_apply(p["moe"], h, cfg, caps=caps,
+                                   prefix=f"{np_}moe.")
+    elif "mlp" in p:
+        h = mlp_apply(p["mlp"], h, cfg, caps=caps, prefix=f"{np_}mlp.")
+    return h, cache, aux
+
+
+def block_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype, enc_len: int = 0) -> Params:
+    if kind in ("attn", "attn_local"):
+        return attn_cache_init(cfg, batch, max_len, dtype)
+    if kind == "dec_attn":
+        c = attn_cache_init(cfg, batch, max_len, dtype)
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), dtype)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.hd), dtype)
+        return c
+    if kind == "mamba":
+        return ssm_lib.mamba_cache_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm_lib.mlstm_cache_init(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm_lib.slstm_cache_init(cfg, batch, dtype)
+    raise ValueError(f"no cache for kind {kind!r}")
+
+
+_BLOCK_LINEARS: Dict[str, List[Tuple[str, str]]] = {
+    # kind -> [(subtree, weight_key)] in capture-name order
+    "attn": [("attn", "wq"), ("attn", "wk"), ("attn", "wv"), ("attn", "wo")],
+    "mamba": [("mamba", "in_proj"), ("mamba", "x_proj"),
+              ("mamba", "dt_proj"), ("mamba", "out_proj")],
+    "mlstm": [("mlstm", "wq"), ("mlstm", "wk"), ("mlstm", "wv"),
+              ("mlstm", "wo")],
+    "slstm": [("slstm", "wz"), ("slstm", "wi"), ("slstm", "wf"),
+              ("slstm", "wo_gate"), ("slstm", "wo")],
+}
+_BLOCK_LINEARS["attn_local"] = _BLOCK_LINEARS["attn"]
+_BLOCK_LINEARS["enc_attn"] = _BLOCK_LINEARS["attn"]
+_BLOCK_LINEARS["dec_attn"] = _BLOCK_LINEARS["attn"] + [
+    ("xattn", "wq"), ("xattn", "wk"), ("xattn", "wv"), ("xattn", "wo")]
+_MLP_LINEARS = {"swiglu": ["wi", "wg", "wo"], "geglu": ["wi", "wg", "wo"],
+                "gelu": ["wi", "wo"], "none": []}
+
+
+# ======================================================================
+# The model
+# ======================================================================
+class LM:
+    """Any assigned architecture, from one ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = self.dtype
+        keys = jax.random.split(key, 8)
+        params: Params = {
+            "embed": embed_init(keys[0], cfg, dt),
+            "unembed": unembed_init(keys[1], cfg, dt),
+        }
+        if cfg.prefix:
+            params["prefix"] = {
+                str(i): _block_init(
+                    jax.random.fold_in(keys[2], i), cfg, kind,
+                    cfg.slot_is_moe(i, True), dt)
+                for i, kind in enumerate(cfg.prefix)
+            }
+        if cfg.n_periods:
+            layers = {}
+            for j, kind in enumerate(cfg.period):
+                is_moe = cfg.slot_is_moe(j, False)
+                kj = jax.random.fold_in(keys[3], j)
+                stacked = jax.vmap(
+                    lambda k: _block_init(k, cfg, kind, is_moe, dt)
+                )(jax.random.split(kj, cfg.n_periods))
+                layers[f"s{j}"] = stacked
+            params["layers"] = layers
+        if cfg.encdec:
+            enc = {
+                "layers": jax.vmap(
+                    lambda k: _block_init(k, cfg, "enc_attn", False, dt)
+                )(jax.random.split(keys[4], cfg.enc_layers)),
+                "ln": rmsnorm_init(cfg.d_model, dt),
+            }
+            params["enc"] = enc
+        return params
+
+    def init_shapes(self) -> Params:
+        """ShapeDtypeStruct param pytree — no allocation (dry-run)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ------------------------------------------------------ embeddings
+    def first_hidden(self, params: Params, batch: Dict[str, jax.Array]):
+        """Embedding (+ modality frontend) output entering block 0."""
+        cfg = self.cfg
+        h = embed_apply(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend is not None and not cfg.encdec:
+            feats = batch["frontend_feats"]               # (B, F, fd)
+            fh = frontend_apply(params["embed"], feats, cfg)
+            if cfg.embed_scale:
+                fh = fh * jnp.asarray(math.sqrt(cfg.d_model), fh.dtype)
+            h = jnp.concatenate([fh.astype(h.dtype), h], axis=1)
+        return h
+
+    def encode(self, params: Params, batch, caps=None) -> jax.Array:
+        """Encoder stack over frontend features (enc-dec archs)."""
+        cfg = self.cfg
+        feats = batch["frontend_feats"]
+        h = frontend_apply(params["embed"], feats, cfg).astype(self.dtype)
+        if caps is None and cfg.scan_layers:
+            def body(h, pl):
+                h, _, _ = block_apply(cfg, "enc_attn", pl, h)
+                return h, None
+            body = self._maybe_remat(body)
+            h, _ = jax.lax.scan(body, h, params["enc"]["layers"])
+        elif caps is None:
+            for li in range(cfg.enc_layers):
+                pl_ = tree_slice_layer(params["enc"]["layers"], li)
+                h, _, _ = block_apply(cfg, "enc_attn", pl_, h)
+        else:
+            for li in range(cfg.enc_layers):
+                pl = tree_slice_layer(params["enc"]["layers"], li)
+                h, _, _ = block_apply(cfg, "enc_attn", pl, h, caps=caps,
+                                      name_prefix=f"enc{li}.")
+        return rmsnorm(params["enc"]["ln"], h, cfg.norm_eps)
+
+    # ---------------------------------------------------------- forward
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "full":
+            return jax.checkpoint(fn, prevent_cse=False)
+        return fn
+
+    def _prefix_len(self, batch) -> Optional[int]:
+        cfg = self.cfg
+        if cfg.frontend is not None and not cfg.encdec:
+            return cfg.frontend_len
+        return None
+
+    def forward(self, params: Params, batch: Dict[str, jax.Array],
+                caps=None) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward. Returns (logits f32, aux loss)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch, caps=caps) if cfg.encdec else None
+        h = self.first_hidden(params, batch)
+        pl = self._prefix_len(batch)
+        aux = jnp.zeros((), jnp.float32)
+
+        for i, kind in enumerate(cfg.prefix):
+            h, _, a = block_apply(
+                cfg, kind, params["prefix"][str(i)], h,
+                is_moe=cfg.slot_is_moe(i, True), caps=caps, enc_out=enc_out,
+                prefix_len=pl, name_prefix=f"p{i}." if caps is not None else "")
+            aux += a
+
+        if cfg.n_periods:
+            if caps is None:
+                def body(carry, xs):
+                    h, aux = carry
+                    for j, kind in enumerate(cfg.period):
+                        h, _, a = block_apply(
+                            cfg, kind, xs[f"s{j}"], h,
+                            is_moe=cfg.slot_is_moe(j, False),
+                            enc_out=enc_out, prefix_len=pl)
+                        aux += a
+                    return (h, aux), None
+                body = self._maybe_remat(body)
+                if cfg.scan_layers:
+                    (h, aux), _ = jax.lax.scan(
+                        body, (h, aux), params["layers"])
+                else:          # unrolled (cost-analysis lowerings)
+                    for pi in range(cfg.n_periods):
+                        xs = {k: tree_slice_layer(v, pi)
+                              for k, v in params["layers"].items()}
+                        (h, aux), _ = body((h, aux), xs)
+            else:
+                for pi in range(cfg.n_periods):
+                    for j, kind in enumerate(cfg.period):
+                        pj = tree_slice_layer(params["layers"][f"s{j}"], pi)
+                        h, _, a = block_apply(
+                            cfg, kind, pj, h,
+                            is_moe=cfg.slot_is_moe(j, False), caps=caps,
+                            enc_out=enc_out, prefix_len=pl,
+                            name_prefix=f"b{pi}.s{j}.")
+                        aux += a
+
+        logits = unembed_apply(params["unembed"], params["embed"], h, cfg)
+        return logits.astype(jnp.float32), aux
+
+    # ------------------------------------------------------------- loss
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Next-token CE (+ z-loss + MoE aux). Returns (loss, metrics)."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        targets = batch["labels"]                         # (B, T_text)
+        # frontends prepend non-text positions: predict text only
+        off = logits.shape[1] - targets.shape[1]
+        lg = logits[:, off:, :]
+        # shift: position t predicts target t+1
+        lg = lg[:, :-1]
+        tg = targets[:, 1:]
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        weights = (tg >= 0).astype(jnp.float32)
+        tg = jnp.maximum(tg, 0)
+        denom = jnp.maximum(weights.sum(), 1.0)
+        ce = (nll * weights).sum() / denom
+        zloss = 1e-4 * ((lse**2) * weights).sum() / denom
+        moe_coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+        loss = ce + zloss + moe_coef * aux
+        return loss, {"ce": ce, "zloss": zloss, "aux": aux,
+                      "tokens": denom}
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_len: int,
+                   dtype=None) -> Params:
+        cfg = self.cfg
+        dt = dtype or self.dtype
+        enc_len = cfg.frontend_len
+        cache: Params = {}
+        if cfg.prefix:
+            cache["prefix"] = {
+                str(i): block_cache_init(cfg, kind, batch, max_len, dt, enc_len)
+                for i, kind in enumerate(cfg.prefix)
+            }
+        if cfg.n_periods:
+            cache["layers"] = {
+                f"s{j}": jax.vmap(
+                    lambda _: block_cache_init(
+                        cfg, kind, batch, max_len, dt, enc_len)
+                )(jnp.arange(cfg.n_periods))
+                for j, kind in enumerate(cfg.period)
+            }
+        return cache
+
+    def init_cache_shapes(self, batch: int, max_len: int, dtype=None):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_len, dtype))
+
+    def cache_specs(self, mesh, dp_axes=("data",), tp_axis: str = "model",
+                    seq_shard: bool = False, prefer_seq: bool = False):
+        """PartitionSpec pytree for the decode cache: batch over the data
+        (+pod) axes, the per-kind 'width' dim (KV heads / head_dim /
+        d_inner) over the model axis when divisible.
+
+        ``seq_shard=True`` (long-context, batch < #data-shards): the KV
+        cache's *sequence* dim shards over the data axes instead of batch
+        (ring-attention-style context parallelism for decode); recurrent
+        state caches replicate over data (they are O(d) small)."""
+        from jax.sharding import PartitionSpec as P
+
+        cfg = self.cfg
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))[tp_axis]
+        dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+        dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+        if seq_shard:
+            seq_dpe, dpe = dpe, None
+        else:
+            seq_dpe = None
+
+        def kv_spec(extra_lead: int):
+            # (B, S, KV, hd): KV heads when they divide TP; otherwise
+            # either head_dim (baseline) or — §Perf ``prefer_seq`` — the
+            # SEQUENCE dim over model (GSPMD all-gathers an hd-sharded
+            # cache for the score contraction; an S-sharded cache keeps
+            # scores local and reduces only softmax partials).
+            if cfg.num_kv_heads % tp == 0:
+                sp = (dpe, seq_dpe, tp_axis, None)
+            elif prefer_seq and seq_dpe is None:
+                sp = (dpe, tp_axis, None, None)
+            elif cfg.hd % tp == 0:
+                sp = (dpe, seq_dpe, None, tp_axis)
+            else:
+                sp = (dpe, seq_dpe, None, None)
+            return P(*([None] * extra_lead), *sp)
+
+        def block_specs(kind: str, extra_lead: int):
+            lead = [None] * extra_lead
+            di_ok = cfg.d_inner % tp == 0
+            if kind in ("attn", "attn_local"):
+                return {"k": kv_spec(extra_lead), "v": kv_spec(extra_lead)}
+            if kind == "dec_attn":
+                return {"k": kv_spec(extra_lead), "v": kv_spec(extra_lead),
+                        "xk": kv_spec(extra_lead), "xv": kv_spec(extra_lead)}
+            if kind == "mamba":
+                di = tp_axis if di_ok else None
+                return {"conv": P(*lead, dpe, None, di),
+                        "ssm": P(*lead, dpe, di, None)}
+            if kind == "mlstm":
+                di = cfg.mlstm_proj * cfg.d_model
+                hd = di // cfg.num_heads
+                hsp = tp_axis if hd % tp == 0 else None
+                return {"c": P(*lead, dpe, None, hsp, None),
+                        "n": P(*lead, dpe, None, hsp),
+                        "m": P(*lead, dpe, None)}
+            if kind == "slstm":
+                dsp = tp_axis if cfg.d_model % tp == 0 else None
+                return {k: P(*lead, dpe, dsp) for k in "cnhm"}
+            raise ValueError(kind)
+
+        specs: Dict[str, Any] = {}
+        if cfg.prefix:
+            specs["prefix"] = {
+                str(i): block_specs(kind, 0)
+                for i, kind in enumerate(cfg.prefix)}
+        if cfg.n_periods:
+            specs["layers"] = {
+                f"s{j}": block_specs(kind, 1)
+                for j, kind in enumerate(cfg.period)}
+        return specs
+
+    def prefill(self, params: Params, batch, cache: Params
+                ) -> Tuple[jax.Array, Params]:
+        """Run the prompt through the model, filling ``cache``.
+
+        Returns (last-position logits (B, V) f32, filled cache).
+        """
+        cfg = self.cfg
+        enc_out = self.encode(params, batch) if cfg.encdec else None
+        h = self.first_hidden(params, batch)
+        pl = self._prefix_len(batch)
+        cache = dict(cache)
+
+        if cfg.prefix:
+            newp = {}
+            for i, kind in enumerate(cfg.prefix):
+                h, c, _ = block_apply(
+                    cfg, kind, params["prefix"][str(i)], h,
+                    cache=cache["prefix"][str(i)], enc_out=enc_out,
+                    prefix_len=pl)
+                newp[str(i)] = c
+            cache["prefix"] = newp
+
+        if cfg.n_periods:
+            def body(h, xs):
+                pj, cj = xs
+                new_c = {}
+                for j, kind in enumerate(cfg.period):
+                    h, c, _ = block_apply(
+                        cfg, kind, pj[f"s{j}"], h, cache=cj[f"s{j}"],
+                        enc_out=enc_out, prefix_len=pl)
+                    new_c[f"s{j}"] = c
+                return h, new_c
+            h, new_layers = self._scan_or_unroll(
+                body, h, params["layers"], cache["layers"])
+            cache["layers"] = new_layers
+
+        logits = unembed_apply(params["unembed"], params["embed"],
+                               h[:, -1:, :], cfg)
+        return logits[:, 0, :].astype(jnp.float32), cache
+
+    def _scan_or_unroll(self, body, h, layers, caches):
+        """scan over periods, or an unrolled Python loop when
+        cfg.scan_layers=False (cost-analysis lowerings)."""
+        from repro.utils.trees import tree_stack
+        if self.cfg.scan_layers:
+            return jax.lax.scan(body, h, (layers, caches))
+        outs = []
+        for pi in range(self.cfg.n_periods):
+            xs = (jax.tree.map(lambda x: x[pi], layers),
+                  jax.tree.map(lambda x: x[pi], caches))
+            h, new_c = body(h, xs)
+            outs.append(new_c)
+        return h, tree_stack(outs)
+
+    def decode_step(self, params: Params, token: jax.Array, cache: Params,
+                    pos) -> Tuple[jax.Array, Params]:
+        """One-token decode. token: (B,) int32; pos: scalar int32 (the
+        absolute position being written). Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        h = embed_apply(params["embed"], token[:, None], cfg)
+        pl = self._prefix_len(None)
+        cache = dict(cache)
+
+        if cfg.prefix:
+            newp = {}
+            for i, kind in enumerate(cfg.prefix):
+                h, c, _ = block_apply(
+                    cfg, kind, params["prefix"][str(i)], h,
+                    cache=cache["prefix"][str(i)], pos=pos, prefix_len=pl)
+                newp[str(i)] = c
+            cache["prefix"] = newp
+
+        if cfg.n_periods:
+            def body(h, xs):
+                pj, cj = xs
+                new_c = {}
+                for j, kind in enumerate(cfg.period):
+                    h, c, _ = block_apply(
+                        cfg, kind, pj[f"s{j}"], h, cache=cj[f"s{j}"],
+                        pos=pos, prefix_len=pl)
+                    new_c[f"s{j}"] = c
+                return h, new_c
+            h, new_layers = self._scan_or_unroll(
+                body, h, params["layers"], cache["layers"])
+            cache["layers"] = new_layers
+
+        logits = unembed_apply(params["unembed"], params["embed"], h, cfg)
+        return logits[:, 0, :].astype(jnp.float32), cache
+
+    # ------------------------------------------------- pruning contract
+    def _segment_linears(self, kinds) -> List[LinearSpec]:
+        """LinearSpec list for one segment. Weights are stored (in, out);
+        the paper works in (out, in) — get/set transpose."""
+        cfg = self.cfg
+        specs: List[LinearSpec] = []
+
+        def mk(path: Tuple[str, ...], name: str):
+            def get(sp, path=path):
+                w = sp
+                for k in path:
+                    w = w[k]
+                return w.T
+
+            def set_(sp, w, path=path):
+                sp = dict(sp)
+                node = sp
+                for k in path[:-1]:
+                    node[k] = dict(node[k])
+                    node = node[k]
+                node[path[-1]] = w.T.astype(self.dtype)
+                return sp
+            return LinearSpec(name=name, get=get, set=set_)
+
+        for slot_key, kind, is_moe in kinds:
+            base = (slot_key,) if slot_key else ()
+            npfx = f"{slot_key}." if slot_key else ""
+            for sub, wkey in _BLOCK_LINEARS[kind]:
+                specs.append(mk(base + (sub, wkey), f"{npfx}{sub}.{wkey}"))
+            if cfg.block_has_mlp(kind):
+                if is_moe:
+                    for wkey in ("wi", "wg", "wo"):
+                        for e in range(cfg.moe.num_experts):
+                            specs.append(LinearSpec(
+                                name=f"{npfx}moe.{wkey}.{e}",
+                                get=self._moe_get(base, wkey, e),
+                                set=self._moe_set(base, wkey, e),
+                            ))
+                    if cfg.moe.num_shared:
+                        for wkey in _MLP_LINEARS[cfg.mlp_kind]:
+                            specs.append(mk(base + ("moe", "shared", wkey),
+                                            f"{npfx}moe.shared.{wkey}"))
+                else:
+                    for wkey in _MLP_LINEARS[cfg.mlp_kind]:
+                        specs.append(mk(base + ("mlp", wkey),
+                                        f"{npfx}mlp.{wkey}"))
+        return specs
+
+    def _moe_get(self, base, wkey, e):
+        def get(sp):
+            node = sp
+            for k in base + ("moe",):
+                node = node[k]
+            return node[wkey][e].T
+        return get
+
+    def _moe_set(self, base, wkey, e):
+        def set_(sp, w):
+            sp = dict(sp)
+            node = sp
+            for k in base:
+                node[k] = dict(node[k])
+                node = node[k]
+            moe = dict(node["moe"]) if base else dict(sp["moe"])
+            if base:
+                node["moe"] = moe
+            else:
+                sp["moe"] = moe
+            moe[wkey] = moe[wkey].at[e].set(w.T.astype(self.dtype))
+            return sp
+        return set_
+
+    def calib_init(self, params: Params, batch) -> Any:
+        """Initial calibration state flowing through prunable segments.
+
+        Plain LMs: the embedding output array.  Enc-dec: a dict
+        {"h": decoder embedding, "enc": projected frontend features} — enc
+        segments advance "enc", decoder segments advance "h" reading the
+        (normed) final "enc"."""
+        if not self.cfg.encdec:
+            return self.first_hidden(params, batch)
+        return {
+            "h": self.first_hidden(params, batch),
+            "enc": frontend_apply(
+                params["embed"], batch["frontend_feats"], self.cfg
+            ).astype(self.dtype),
+        }
+
+    def _seg_apply_factory(self, kinds, seg_type: str):
+        """seg_type: 'plain' | 'enc' | 'dec' (enc-dec calibration flow)."""
+        cfg = self.cfg
+
+        def run_blocks(seg_params, h, caps, enc_out=None):
+            for slot_key, kind, is_moe in kinds:
+                p = seg_params[slot_key] if slot_key else seg_params
+                h, _, _ = block_apply(
+                    cfg, kind, p, h, is_moe=is_moe, caps=caps,
+                    enc_out=enc_out, prefix_len=self._prefix_len(None),
+                    name_prefix=f"{slot_key}." if slot_key else "")
+            return h
+
+        def seg_apply(seg_params, state, capture=False):
+            caps = {} if capture else None
+            if seg_type == "plain":
+                return run_blocks(seg_params, state, caps), (caps or {})
+            state = dict(state)
+            if seg_type == "enc":
+                state["enc"] = run_blocks(seg_params, state["enc"], caps)
+            else:
+                enc_out = rmsnorm(seg_params["_encln"], state["enc"],
+                                  cfg.norm_eps)
+                state["h"] = run_blocks(seg_params, state["h"], caps, enc_out)
+            return state, (caps or {})
+
+        return seg_apply
+
+    def prunable_segments(self) -> List[SegmentSpec]:
+        """One segment per prefix block / per period instance (+ encoder
+        layers for enc-dec).  CPU-scale path (unrolled, capture mode)."""
+        cfg = self.cfg
+        segs: List[SegmentSpec] = []
+        dec_type = "dec" if cfg.encdec else "plain"
+
+        if cfg.encdec:
+            for li in range(cfg.enc_layers):
+                kinds = [("", "enc_attn", False)]
+                segs.append(SegmentSpec(
+                    name=f"enc{li}",
+                    apply=self._seg_apply_factory(kinds, "enc"),
+                    linears=self._segment_linears(kinds),
+                    get_params=functools.partial(self._get_enc_layer, li),
+                    set_params=functools.partial(self._set_enc_layer, li),
+                ))
+
+        for i, kind in enumerate(cfg.prefix):
+            kinds = [("", kind, cfg.slot_is_moe(i, True))]
+            segs.append(SegmentSpec(
+                name=f"prefix{i}",
+                apply=self._seg_apply_factory(kinds, dec_type),
+                linears=self._segment_linears(kinds),
+                get_params=functools.partial(self._get_prefix, i),
+                set_params=functools.partial(self._set_prefix, i),
+            ))
+
+        kinds = [(f"s{j}", kind, cfg.slot_is_moe(j, False))
+                 for j, kind in enumerate(cfg.period)]
+        for pi in range(cfg.n_periods):
+            segs.append(SegmentSpec(
+                name=f"period{pi}",
+                apply=self._seg_apply_factory(kinds, dec_type),
+                linears=self._segment_linears(kinds),
+                get_params=functools.partial(self._get_period, pi),
+                set_params=functools.partial(self._set_period, pi),
+            ))
+        return segs
+
+    def _get_enc_layer(self, li, params):
+        return tree_slice_layer(params["enc"]["layers"], li)
+
+    def _set_enc_layer(self, li, params, seg_params):
+        new = jax.tree.map(
+            lambda full, s: jnp.asarray(full).at[li].set(
+                s.astype(full.dtype)),
+            params["enc"]["layers"], seg_params)
+        return {**params, "enc": {**params["enc"], "layers": new}}
+
+    def _get_prefix(self, i, params):
+        sp = dict(params["prefix"][str(i)])
+        if self.cfg.encdec:
+            sp["_encln"] = params["enc"]["ln"]
+        return sp
+
+    def _set_prefix(self, i, params, seg_params):
+        sp = {k: v for k, v in seg_params.items() if k != "_encln"}
+        return {**params, "prefix": {**params["prefix"], str(i): sp}}
+
+    def _get_period(self, pi, params):
+        sp = {k: tree_slice_layer(v, pi) for k, v in params["layers"].items()}
+        if self.cfg.encdec:
+            sp["_encln"] = params["enc"]["ln"]
+        return sp
+
+    def _set_period(self, pi, params, seg_params):
+        new = {
+            k: jax.tree.map(
+                lambda full, s: jnp.asarray(full).at[pi].set(
+                    s.astype(full.dtype)),
+                params["layers"][k], seg_params[k])
+            for k in params["layers"]
+        }
+        return {**params, "layers": new}
+
+    # -------------------------------------------------------- accounting
+    def param_counts(self) -> Dict[str, int]:
+        """total / active / embedding param counts (for 6·N·D roofline).
+
+        ``active`` scales MoE expert weights by top_k/num_experts (+shared
+        experts in full); embedding = token table (excluded from N by the
+        6ND convention; the LM head matmul is real compute and stays in).
+        """
+        shapes = self.init_shapes()
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        total = active = embed = 0
+        mc = self.cfg.moe
+        for keypath, leaf in flat:
+            path = "/".join(str(getattr(k, "key", k)) for k in keypath)
+            n = int(np.prod(leaf.shape))
+            total += n
+            if path.endswith("embed/tok"):
+                embed += n
+                continue
+            if mc is not None and "moe/w" in path and "shared" not in path:
+                active += int(n * mc.top_k / mc.num_experts)
+            else:
+                active += n
+        return {"total": total, "active": active, "embed": embed,
+                "nonembed_total": total - embed}

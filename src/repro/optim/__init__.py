@@ -1,0 +1,23 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedules import warmup_cosine, warmup_linear
+from repro.optim.compression import (
+    ef_quantize,
+    ef_init,
+    compressed_psum,
+    quantize_int8,
+    dequantize_int8,
+)
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "warmup_cosine",
+    "warmup_linear",
+    "ef_quantize",
+    "ef_init",
+    "compressed_psum",
+    "quantize_int8",
+    "dequantize_int8",
+]

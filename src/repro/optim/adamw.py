@@ -1,0 +1,88 @@
+"""AdamW with configurable moment dtype + global-norm clipping.
+
+Moments can be stored bf16 (halves optimizer HBM — the dominant training
+-state term at scale; see EXPERIMENTS.md §Dry-run memory table).  Master
+computation is always f32; params keep their storage dtype (bf16 weights
++ f32 update math = standard mixed precision).  ZeRO-1 sharding of the
+moments is a *sharding* concern: dist.sharding assigns moments the same
+specs as their params plus the fsdp axes, so the optimizer is agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array       # () int32
+    mu: Any               # first moments (pytree like params)
+    nu: Any               # second moments
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"         # "float32" | "bfloat16"
+
+    # ------------------------------------------------------------------
+    def init(self, params: Any) -> OptState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: Any, state: OptState, params: Any
+               ) -> Tuple[Any, OptState, dict]:
+        """Returns (new_params, new_state, stats)."""
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, mu, nu):
+            mu32 = mu.astype(jnp.float32) * b1 + g * (1 - b1)
+            nu32 = nu.astype(jnp.float32) * b2 + (g * g) * (1 - b2)
+            mhat = mu32 / bc1
+            vhat = nu32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+        out = jax.tree.map(upd, params, g32, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_mu, new_nu), {
+            "grad_norm": gnorm, "lr": lr}

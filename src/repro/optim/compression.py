@@ -1,0 +1,93 @@
+"""Int8 gradient compression with error feedback (cross-pod DP traffic).
+
+At 2×16×16 the inter-pod gradient all-reduce crosses DCN (slow links);
+int8 compression cuts its bytes 4× (vs f32) / 2× (vs bf16).  Plain
+quantization biases the update — error feedback (Seide et al. 2014;
+Karimireddy et al. 2019) accumulates the quantization residual locally
+and re-adds it next step, restoring convergence (tested in
+tests/test_optim.py by matching full-precision training loss).
+
+Two layers:
+  - ``ef_quantize``: pure pytree transform (residual carried in state) —
+    what the trainer calls on grads before the psum when enabled;
+  - ``compressed_psum``: shard_map collective — reduce-scatter the int8
+    payload + per-chunk scales, dequantize-sum locally, all-gather int8.
+    Wire bytes ≈ 2·N·1B instead of 2·N·4B.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params: Any) -> Any:
+    """Zero error-feedback residuals, shaped like params (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_quantize(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Quantize (grads + residual) to int8-and-back; return
+    (dequantized grads, new residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return deq, x - deq
+
+    out = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, res
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce-**mean** of 1-D ``x`` over ``axis_name``, int8 on the wire.
+
+    Call INSIDE shard_map.  Scheme (reduce-scatter + all-gather, both in
+    int8 with per-chunk f32 scales):
+
+      1. split x into n chunks, quantize each (per-chunk scale);
+      2. all_to_all: shard i receives chunk i from every peer (int8);
+      3. dequantize + mean locally; re-quantize;
+      4. all_gather the int8 result chunks (+ scales).
+
+    Wire ≈ 2·N·1B vs 8·N·1B for an f32 ring all-reduce (4×).  Length of
+    x must divide the axis size (trainer pads the flattened grads).
+    """
+    n = jax.lax.psum(1, axis_name)
+    chunks = x.reshape(n, -1)                               # (n, N/n)
+    # per-chunk quantization
+    amax = jnp.max(jnp.abs(chunks), axis=1)
+    scales = jnp.maximum(amax, 1e-12) / 127.0               # (n,)
+    q = jnp.clip(jnp.round(chunks / scales[:, None]),
+                 -127, 127).astype(jnp.int8)
+    # shard i collects chunk i from all peers: (n, N/n) int8
+    recv = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    peer_scales = jax.lax.all_to_all(
+        scales.reshape(n, 1), axis_name, split_axis=0, concat_axis=0,
+        tiled=False)                                        # (n, 1)
+    local = jnp.sum(
+        recv.astype(jnp.float32) * peer_scales, axis=0) / n  # (N/n,)
+    q2, s2 = quantize_int8(local)
+    out = jax.lax.all_gather(q2, axis_name, tiled=True)     # (N,) int8
+    out_scales = jax.lax.all_gather(s2, axis_name)          # (n,)
+    return (out.reshape(n, -1).astype(jnp.float32)
+            * out_scales[:, None]).reshape(-1)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (as step → lr callables for AdamW.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def warmup_linear(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        lin = peak + (floor - peak) * prog
+        return jnp.where(s < warmup, warm, lin)
+    return lr

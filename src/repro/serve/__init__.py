@@ -1,0 +1,12 @@
+"""Serving: batched KV-cache decode engine + 2:4-sparse weight path."""
+
+from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.sparse import sparsify_params, DEFAULT_SPARSE_PATTERNS
+
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "Result",
+    "sparsify_params",
+    "DEFAULT_SPARSE_PATTERNS",
+]

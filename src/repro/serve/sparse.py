@@ -1,0 +1,69 @@
+"""2:4-sparse weight packing for serving (the TPU 2:4 payoff).
+
+After N:M pruning, matrices are 50% zeros in every 4-row group along the
+input dim — exactly the layout ``kernels.compress_24`` packs.  Packed
+leaves become {"vals": (K/2, N), "idx": (K/2, N) int8}; models.layers.
+linear dispatches them to the nm_spmm kernel transparently, so the SAME
+model code serves dense or sparse checkpoints.
+
+Weight bytes: K·N·2B → K/2·N·(2+1)B = 0.75× … with idx packed to 2 bits
+on real TPU (int8 here for interpret-mode clarity) → 0.5625×; decode-time
+weight traffic drops accordingly (EXPERIMENTS.md §Perf quantifies it).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+from repro.kernels import ops as kops
+
+# matmuls worth packing by default: the big FFN + attention projections
+DEFAULT_SPARSE_PATTERNS = (
+    r"(mlp|moe/shared)/(wi|wg|wo)$",
+    r"attn/(wq|wk|wv|wo)$",
+)
+
+
+def _is_24_sparse(w) -> bool:
+    """2:4 along the input dim — 2-D (K, N) or layer-stacked (L, K, N)."""
+    if w.ndim not in (2, 3) or w.shape[-2] % 4:
+        return False
+    a = np.asarray(jax.device_get(w))
+    a = a.reshape(-1, a.shape[-2] // 4, 4, a.shape[-1]) if w.ndim == 3 \
+        else a.reshape(1, a.shape[0] // 4, 4, a.shape[1])
+    return bool(((a != 0).sum(axis=2) <= 2).all())
+
+
+def sparsify_params(
+    params: Any,
+    patterns: Sequence[str] = DEFAULT_SPARSE_PATTERNS,
+    verify: bool = True,
+) -> Any:
+    """Pack every matching 2:4-sparse leaf. Non-matching / non-2:4 leaves
+    pass through unchanged (so a half-pruned model still serves).
+
+    Layer-stacked leaves (L, K, N) pack to stacked {"vals": (L, K/2, N),
+    "idx": …} — the scan's tree-slice then yields per-layer packed dicts
+    that models.layers.linear dispatches to the nm_spmm kernel."""
+    import jax.numpy as jnp
+
+    regs = [re.compile(p) for p in patterns]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for keypath, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        match = any(r.search(path) for r in regs)
+        if match and (not verify or _is_24_sparse(leaf)):
+            if leaf.ndim == 3:
+                vals, idx = jax.vmap(kops.compress_24)(jnp.asarray(leaf))
+            else:
+                vals, idx = kops.compress_24(leaf)
+            leaves.append({"vals": vals, "idx": idx})
+        else:
+            leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,10 @@
+"""Fault-tolerant distributed training loop."""
+
+from repro.train.loop import (
+    StragglerError,
+    TrainConfig,
+    Trainer,
+    make_train_step,
+)
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "StragglerError"]

@@ -1,0 +1,243 @@
+"""Fault-tolerant training loop.
+
+Production behaviors (all unit-tested):
+  - step-indexed deterministic data (resume = continue the counter);
+  - atomic checkpoints every ``ckpt_every`` steps, resume from the
+    newest *valid* one (hash-verified; walks past torn writes);
+  - elastic restore: checkpoint leaves are host numpy → re-placed under
+    the *current* mesh's shardings, so restarting on a different mesh
+    shape (chips died, pod removed) just works;
+  - straggler watchdog: per-step wall clock vs a running median; slow
+    steps are logged + counted, and after ``straggler_abort`` consecutive
+    hits the loop checkpoints and raises (the cluster launcher restarts
+    elsewhere — standard TPU practice, simulated in tests);
+  - microbatch gradient accumulation via lax.scan (keeps the HLO one
+    microbatch deep) with optional int8 error-feedback gradient
+    compression on the accumulated grads;
+  - loss/metric NaN guard: a non-finite loss step is skipped (params
+    untouched) and counted — one bad host can't poison the run.
+
+The step function is pjit'd with explicit param/batch shardings from
+dist.sharding; XLA inserts the DP gradient psum + TP collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import statistics
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointStore
+from repro.models.transformer import LM
+from repro.optim import AdamW, OptState, ef_init, ef_quantize
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    ckpt_every: int = 20
+    keep_ckpts: int = 3
+    out_dir: str = "/tmp/repro_train"
+    microbatches: int = 1            # grad-accumulation chunks
+    grad_compression: bool = False   # int8 EF on accumulated grads
+    straggler_factor: float = 5.0    # step > factor×median ⇒ straggler
+    straggler_abort: int = 3         # consecutive stragglers ⇒ abort
+    log_every: int = 10
+
+
+def make_train_step(
+    model: LM,
+    opt: AdamW,
+    microbatches: int = 1,
+    grad_compression: bool = False,
+) -> Callable:
+    """(params, opt_state, ef_state, batch) → (params, opt_state,
+    ef_state, metrics).  Pure — jit/pjit it with the caller's shardings."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_micro(batch):
+        return jax.tree.map(
+            lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                *x.shape[1:]),
+            batch)
+
+    def step(params, opt_state: OptState, ef_state, batch):
+        if microbatches > 1:
+            micro = split_micro(batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), metrics = jax.lax.scan(
+                accum, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if grad_compression:
+            grads, ef_state = ef_quantize(grads, ef_state)
+
+        # NaN guard: skip the update (identity) when loss is non-finite.
+        ok = jnp.isfinite(loss)
+        new_params, new_opt, stats = opt.update(grads, opt_state, params)
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(ok, n, o), new_params, params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+        metrics = {**metrics, **stats, "loss": loss,
+                   "skipped": (~ok).astype(jnp.float32)}
+        return new_params, new_opt, ef_state, metrics
+
+    return step
+
+
+class StragglerError(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: LM,
+        opt: AdamW,
+        pipeline,
+        cfg: TrainConfig,
+        mesh=None,
+        fsdp_axes: Sequence[str] = (),
+    ):
+        self.model = model
+        self.opt = opt
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.mesh = mesh
+        self.fsdp_axes = tuple(fsdp_axes)
+        self.store = CheckpointStore(cfg.out_dir, keep=cfg.keep_ckpts)
+        self.metrics_path = os.path.join(cfg.out_dir, "metrics.jsonl")
+        self.straggler_events = 0
+
+        self._step_fn = jax.jit(make_train_step(
+            model, opt, cfg.microbatches, cfg.grad_compression),
+            donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.key(seed))
+        if self.mesh is not None:
+            from repro.dist.sharding import shard_params
+            params = shard_params(params, self.mesh, self.fsdp_axes)
+        opt_state = self.opt.init(params)
+        ef_state = (ef_init(params) if self.cfg.grad_compression
+                    else jnp.zeros(()))
+        return params, opt_state, ef_state
+
+    def _state_template(self):
+        params, opt_state, ef_state = jax.eval_shape(self.init_state)
+        return {"params": params, "opt": opt_state, "ef": ef_state}
+
+    def restore_or_init(self):
+        """Returns (start_step, params, opt_state, ef_state)."""
+        template = jax.tree.map(
+            lambda s: np.zeros(s.shape, s.dtype), self._state_template())
+        restored = self.store.restore(template)
+        if restored is None:
+            params, opt_state, ef_state = self.init_state()
+            return 0, params, opt_state, ef_state
+        step, tree, _ = restored
+        log.info("restored checkpoint at step %d", step)
+        params, opt_state, ef_state = (
+            tree["params"], tuple(tree["opt"]), tree["ef"])
+        opt_state = OptState(*opt_state)
+        if self.mesh is not None:   # elastic: re-shard onto current mesh
+            from repro.dist.sharding import param_shardings
+            psh = param_shardings(params, self.mesh, self.fsdp_axes)
+            params = jax.device_put(params, psh)
+            opt_state = OptState(
+                jax.device_put(opt_state.step),
+                jax.device_put(opt_state.mu, psh),
+                jax.device_put(opt_state.nu, psh),
+            )
+        else:
+            params = jax.device_put(params)
+            opt_state = jax.device_put(opt_state)
+        ef_state = jax.device_put(ef_state)
+        return step, params, opt_state, ef_state
+
+    def _log_metrics(self, step: int, metrics: Dict[str, Any],
+                     seconds: float) -> None:
+        rec = {"step": step, "seconds": seconds}
+        rec.update({k: float(jax.device_get(v)) for k, v in metrics.items()})
+        with open(self.metrics_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: Optional[int] = None):
+        """Train until cfg.total_steps (resuming automatically)."""
+        cfg = self.cfg
+        start, params, opt_state, ef_state = self.restore_or_init()
+        end = min(cfg.total_steps, start + (max_steps or cfg.total_steps))
+        durations: list = []
+        consecutive_stragglers = 0
+
+        step = start
+        while step < end:
+            batch = self.pipeline.batch_at(step)
+            t0 = time.monotonic()
+            params, opt_state, ef_state, metrics = self._step_fn(
+                params, opt_state, ef_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+
+            # straggler watchdog
+            if len(durations) >= 5:
+                med = statistics.median(durations[-20:])
+                if dt > cfg.straggler_factor * med:
+                    self.straggler_events += 1
+                    consecutive_stragglers += 1
+                    log.warning(
+                        "straggler step %d: %.3fs vs median %.3fs",
+                        step, dt, med)
+                    if consecutive_stragglers >= cfg.straggler_abort:
+                        self.store.save(step + 1, {
+                            "params": params, "opt": opt_state,
+                            "ef": ef_state})
+                        raise StragglerError(
+                            f"{consecutive_stragglers} consecutive "
+                            f"straggler steps at step {step}")
+                else:
+                    consecutive_stragglers = 0
+            durations.append(dt)
+
+            step += 1
+            if step % cfg.log_every == 0 or step == end:
+                self._log_metrics(step, metrics, dt)
+            if step % cfg.ckpt_every == 0 or step == end:
+                self.store.save(step, {
+                    "params": params, "opt": opt_state, "ef": ef_state})
+
+        return params, opt_state, {
+            "steps": step - start,
+            "straggler_events": self.straggler_events,
+        }

@@ -1,0 +1,20 @@
+"""Shared utilities: pytree helpers, HLO collective parsing, logging."""
+
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_slice_layer,
+    tree_stack,
+    tree_unstack,
+)
+from repro.utils.hlo import collective_bytes, parse_collectives
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_slice_layer",
+    "tree_stack",
+    "tree_unstack",
+    "collective_bytes",
+    "parse_collectives",
+]

@@ -1,0 +1,37 @@
+"""Pytree helpers used across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree (by leaf dtype)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_stack(trees: Sequence[Any]) -> Any:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Any, n: int) -> List[Any]:
+    """Inverse of tree_stack: split leading axis of every leaf."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_slice_layer(tree: Any, i) -> Any:
+    """Select layer ``i`` from a stacked pytree (leaf[i])."""
+    return jax.tree.map(lambda x: x[i], tree)

@@ -1,0 +1,83 @@
+"""Streaming Hessian accumulation + dampened inversion."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hessian import (
+    HessianAccumulator,
+    dampened_inverse,
+    dampened_inverse_np,
+)
+
+
+def test_streaming_equals_batch():
+    key = jax.random.key(0)
+    m, total = 24, 256
+    x = jax.random.normal(key, (m, total))
+    acc = HessianAccumulator(m)
+    for i in range(0, total, 64):
+        acc.update(x[:, i:i + 64])
+    h = acc.finalize()
+    ref = 2.0 * np.asarray(x, np.float64) @ np.asarray(x, np.float64).T / total
+    np.testing.assert_allclose(np.asarray(h), ref, rtol=1e-4)
+    assert float(acc.count) == total
+
+
+def test_uneven_chunks_equal():
+    x = jax.random.normal(jax.random.key(1), (8, 100))
+    a, b = HessianAccumulator(8), HessianAccumulator(8)
+    a.update(x)
+    for lo, hi in [(0, 7), (7, 50), (50, 100)]:
+        b.update(x[:, lo:hi])
+    np.testing.assert_allclose(np.asarray(a.h), np.asarray(b.h), rtol=1e-4)
+
+
+def test_merge_matches_concat():
+    x = jax.random.normal(jax.random.key(2), (8, 96))
+    a, b, c = (HessianAccumulator(8) for _ in range(3))
+    a.update(x[:, :32])
+    b.update(x[:, 32:])
+    c.update(x)
+    merged = a.merge(b)
+    np.testing.assert_allclose(np.asarray(merged.h), np.asarray(c.h),
+                               rtol=1e-4)
+
+
+def test_weighted_equals_subset():
+    """Weighted update with 0/1 weights == plain update on the kept
+    columns (the MoE routed-token Hessian)."""
+    x = jax.random.normal(jax.random.key(3), (8, 64))
+    keep = np.zeros(64, bool)
+    keep[::3] = True
+    a = HessianAccumulator(8)
+    a.update_weighted(x, jnp.asarray(keep, jnp.float32))
+    b = HessianAccumulator(8)
+    b.update(x[:, keep])
+    np.testing.assert_allclose(np.asarray(a.h), np.asarray(b.h), rtol=1e-4)
+
+
+def test_dampened_inverse_pd_and_matches_np():
+    x = jax.random.normal(jax.random.key(4), (16, 40))
+    h = 2.0 * x @ x.T / 40
+    inv = dampened_inverse(h, 0.01)
+    assert bool(jnp.all(jnp.isfinite(inv)))
+    ref = dampened_inverse_np(np.asarray(h, np.float64), 0.01)
+    np.testing.assert_allclose(np.asarray(inv), ref, rtol=2e-3)
+    # eigenvalues of the inverse must be positive (PD)
+    eig = np.linalg.eigvalsh(np.asarray(inv, np.float64))
+    assert eig.min() > 0
+
+
+def test_dampened_inverse_rank_deficient():
+    """Rank-1 H (single calibration token) must still invert cleanly."""
+    v = jax.random.normal(jax.random.key(5), (12, 1))
+    h = 2.0 * v @ v.T
+    inv = dampened_inverse(h, 0.01)
+    assert bool(jnp.all(jnp.isfinite(inv)))
+
+
+def test_zero_activations_floor():
+    h = jnp.zeros((6, 6))
+    inv = dampened_inverse(h, 0.01)
+    assert bool(jnp.all(jnp.isfinite(inv)))

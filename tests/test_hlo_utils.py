@@ -1,0 +1,53 @@
+"""HLO collective parser (the roofline's collective-bytes source)."""
+
+from repro.utils.hlo import collective_bytes, parse_collectives
+
+HLO = """
+HloModule jit_step
+%all-reduce.1 = f32[256,4096]{1,0} all-reduce(%x), channel_id=1
+%all-reduce.2 = (f32[8,16]{1,0}, bf16[4,4]{1,0}) all-reduce(%a, %b)
+%all-gather.3 = bf16[1024,2816]{1,0} all-gather(%p), dimensions={0}
+%all-to-all.4 = f32[64,32]{1,0} all-to-all(%q), dimensions={0}
+%collective-permute.5 = bf16[128]{0} collective-permute(%r)
+%reduce-scatter.6 = f32[32]{0} reduce-scatter(%s), dimensions={0}
+%add.7 = f32[2,2]{1,0} add(%u, %v)
+"""
+
+SHLO = """
+%0 = stablehlo.all_reduce(%arg0) : (tensor<512x1024xf32>) -> tensor<512x1024xf32>
+%1 = stablehlo.all_gather(%arg1) : (tensor<16x8xbf16>) -> tensor<128x8xbf16>
+"""
+
+
+def test_parse_hlo_ops():
+    recs = parse_collectives(HLO)
+    ops = [r["op"] for r in recs]
+    assert ops == ["all-reduce", "all-reduce", "all-gather", "all-to-all",
+                   "collective-permute", "reduce-scatter"]
+    b = {r["op"]: 0 for r in recs}
+    for r in recs:
+        b[r["op"]] += r["operand_bytes"]
+    assert b["all-reduce"] == 256 * 4096 * 4 + (8 * 16 * 4 + 4 * 4 * 2)
+    assert b["all-gather"] == 1024 * 2816 * 2
+    assert b["all-to-all"] == 64 * 32 * 4
+    assert b["collective-permute"] == 128 * 2
+    assert b["reduce-scatter"] == 32 * 4
+
+
+def test_aggregate_and_wire_multipliers():
+    stats = collective_bytes(HLO)
+    assert stats.total_count == 6
+    # all-reduce rings move ~2× operand bytes
+    ar = stats.operand_bytes["all-reduce"]
+    assert stats.wire_bytes >= stats.total_bytes + ar - 1
+
+
+def test_parse_stablehlo():
+    recs = parse_collectives(SHLO)
+    assert [r["op"] for r in recs] == ["all-reduce", "all-gather"]
+    assert recs[0]["operand_bytes"] == 512 * 1024 * 4
+    assert recs[1]["operand_bytes"] == 16 * 8 * 2
+
+
+def test_no_false_positives():
+    assert parse_collectives("%x = f32[8] add(%a, %b)\n") == []

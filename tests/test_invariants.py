@@ -1,0 +1,146 @@
+"""Property-based tests of system-level invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_psd_hessian
+from repro.core import masks as masks_lib
+from repro.core import mrp
+from repro.core.hessian import HessianAccumulator, dampened_inverse
+from repro.core.pruner import prune_matrix, reconstruction_error
+from repro.kernels import ops, ref
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+# ----------------------------------------------------------------------
+# Pruning invariants
+# ----------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), method=st.sampled_from(["SS", "SM", "MM"]))
+def test_prune_idempotent_on_mask(seed, method):
+    """Re-running compensation with the SAME mask must not change w
+    (the optimal δw of an already-satisfied constraint set is 0)."""
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (8, 32))
+    h = random_psd_hessian(jax.random.fold_in(key, 1), 32)
+    res = prune_matrix(w, h, "2:4", method=method, blocksize=32)
+    hinv = dampened_inverse(h)
+    w2, loss2 = mrp.mrp_compensate_mask(res.w, hinv, res.mask)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(res.w), atol=1e-4)
+    assert float(jnp.max(loss2)) < 1e-6      # pruned weights already zero
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_prune_scale_invariance(seed):
+    """Scaling H by a constant must not change mask or compensation
+    (Eq. 11–14 are scale-free in H up to dampening)."""
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (8, 32))
+    h = random_psd_hessian(jax.random.fold_in(key, 1), 32)
+    a = prune_matrix(w, h, "2:4", method="SM", blocksize=32)
+    b = prune_matrix(w, 7.3 * h, "2:4", method="SM", blocksize=32)
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    np.testing.assert_allclose(np.asarray(a.w), np.asarray(b.w), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_compensation_never_hurts(seed):
+    """SM (with compensation) ≤ same-mask zeroing without compensation
+    in reconstruction error — the optimal δw can't be worse than δw=0."""
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (8, 32))
+    h = random_psd_hessian(jax.random.fold_in(key, 1), 32)
+    res = prune_matrix(w, h, "2:4", method="SM", blocksize=32)
+    w_zeroed = jnp.where(res.mask, 0.0, w)
+    assert (reconstruction_error(w, res.w, h)
+            <= reconstruction_error(w, w_zeroed, h) + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(2, 12),
+    seed=st.integers(0, 2**30),
+)
+def test_row_independence(rows, seed):
+    """Remark 4.2: row q's compensation is independent of other rows —
+    permuting rows and pruning commutes."""
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (rows, 16))
+    h = random_psd_hessian(jax.random.fold_in(key, 1), 16)
+    hinv = dampened_inverse(h)
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random((rows, 16)) < 0.3)
+    perm = rng.permutation(rows)
+    a, _ = mrp.mrp_compensate_mask(w, hinv, mask)
+    b, _ = mrp.mrp_compensate_mask(w[perm], hinv, mask[perm])
+    np.testing.assert_allclose(np.asarray(a)[perm], np.asarray(b),
+                               atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Hessian invariants
+# ----------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), splits=st.integers(1, 5))
+def test_hessian_chunking_invariance(seed, splits):
+    x = jax.random.normal(jax.random.key(seed), (8, 60))
+    whole = HessianAccumulator(8)
+    whole.update(x)
+    chunked = HessianAccumulator(8)
+    bounds = sorted(
+        np.random.default_rng(seed).choice(59, splits, replace=False) + 1)
+    prev = 0
+    for b in list(bounds) + [60]:
+        if b > prev:
+            chunked.update(x[:, prev:b])
+        prev = b
+    np.testing.assert_allclose(np.asarray(whole.h), np.asarray(chunked.h),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Kernel invariants
+# ----------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**30),
+       k=st.sampled_from([64, 128]), n=st.sampled_from([64, 128]))
+def test_compress_roundtrip_property(seed, k, n):
+    """compress→decompress is the identity on any 2:4-sparse matrix."""
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (k, n))
+    gt = w.reshape(k // 4, 4, n).transpose(0, 2, 1)
+    _, idx = jax.lax.top_k(-jnp.abs(gt), 2)
+    m = jax.nn.one_hot(idx, 4).sum(-2) > 0
+    wg = jnp.where(m, 0, gt).transpose(0, 2, 1).reshape(k, n)
+    vals, pidx = ops.compress_24(wg)
+    np.testing.assert_array_equal(
+        np.asarray(ref.decompress_24(vals, pidx)), np.asarray(wg))
+    # index stream is always in-range and strictly ordered per pair
+    pid = np.asarray(pidx).reshape(k // 4, 2, n)
+    assert pid.min() >= 0 and pid.max() <= 3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), scale=st.floats(1e-3, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.key(seed), (256,)) * scale
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-9 * scale
+
+
+# ----------------------------------------------------------------------
+# Mask algebra invariants
+# ----------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), n=st.integers(1, 3))
+def test_nm_mask_count_invariant_under_score_shift(seed, n):
+    """Adding a constant to all scores must not change the N:M mask."""
+    sc = jax.random.normal(jax.random.key(seed), (6, 24))
+    a = masks_lib.nm_mask_from_scores(sc, n, 4)
+    b = masks_lib.nm_mask_from_scores(sc + 123.0, n, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _make_24_sparse(key, k, n, dtype):
+    w = jax.random.normal(key, (k, n)).astype(dtype)
+    gt = w.reshape(k // 4, 4, n).transpose(0, 2, 1)
+    _, idx = jax.lax.top_k(-jnp.abs(gt.astype(jnp.float32)), 2)
+    mask = jax.nn.one_hot(idx, 4).sum(-2) > 0
+    return jnp.where(mask, 0, gt).transpose(0, 2, 1).reshape(k, n)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("k,n,m", [(128, 128, 64), (256, 192, 96),
+                                   (64, 320, 8), (512, 128, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nm_spmm_sweep(k, n, m, dtype):
+    key = jax.random.key(k + n + m)
+    wg = _make_24_sparse(key, k, n, dtype)
+    vals, idx = ops.compress_24(wg)
+    # roundtrip
+    np.testing.assert_allclose(
+        np.asarray(ref.decompress_24(vals, idx), np.float32),
+        np.asarray(wg, np.float32))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k)).astype(dtype)
+    got = ops.nm_matmul(x, vals, idx, out_dtype=jnp.float32)
+    want = ref.nm_spmm_ref(x, vals, idx)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 8)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("m,t", [(32, 128), (96, 320), (128, 128),
+                                 (70, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hessian_sweep(m, t, dtype):
+    x = jax.random.normal(jax.random.key(m * t), (m, t)).astype(dtype)
+    got = ops.hessian_xxt(x)
+    want = ref.hessian_accum_ref(x)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("r,c", [(16, 32), (48, 64), (128, 128), (33, 20)])
+def test_nm_select_sweep(r, c):
+    key = jax.random.key(r * c)
+    w = jax.random.normal(key, (r, c))
+    a = jax.random.normal(jax.random.fold_in(key, 1), (c, c))
+    hinv = a @ a.T / c + jnp.eye(c)
+    got = ops.nm_select_mask(w, hinv)
+    want = ref.nm_select_ref(w, hinv)
+    assert bool(jnp.all(got == want))
+    # validity: exactly 2 pruned per group of 4
+    assert (np.asarray(got).reshape(r, c // 4, 4).sum(-1) == 2).all()
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("bh,t,d", [(2, 128, 32), (4, 256, 64), (1, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attn_sweep(bh, t, d, causal):
+    key = jax.random.key(bh * t + d)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (bh, t, d))
+               for i in range(3))
+    got = ops.attention(q, k, v, causal=causal)
+    want = ref.flash_attn_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attn_bf16():
+    key = jax.random.key(9)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (2, 128, 64)).astype(jnp.bfloat16)
+               for i in range(3))
+    got = ops.attention(q, k, v, causal=True)
+    want = ref.flash_attn_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)

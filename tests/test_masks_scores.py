@@ -1,0 +1,129 @@
+"""Mask construction + sparsity specs — incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_psd_hessian
+from repro.core import masks as masks_lib
+from repro.core import scores
+from repro.core.hessian import dampened_inverse
+from repro.core.sparsity import SparsitySpec
+
+
+# ----------------------------------------------------------------------
+# SparsitySpec
+# ----------------------------------------------------------------------
+def test_spec_parse():
+    s = SparsitySpec.parse("0.5")
+    assert not s.is_semi_structured and s.fraction == 0.5
+    s = SparsitySpec.parse("2:4")
+    assert s.is_semi_structured and (s.n, s.m) == (2, 4)
+    assert s.fraction == 0.5
+    with pytest.raises(ValueError):
+        SparsitySpec.parse("4:2")
+    with pytest.raises(ValueError):
+        SparsitySpec.parse("1.5")
+
+
+@given(st.integers(1, 7), st.integers(2, 8))
+def test_spec_nm_property(n, m):
+    if n >= m:
+        with pytest.raises(ValueError):
+            SparsitySpec.semi_structured(n, m)
+        return
+    s = SparsitySpec.semi_structured(n, m)
+    assert abs(s.fraction - n / m) < 1e-9
+    assert s.pruned_per_row_block(4 * m) == 4 * n
+
+
+# ----------------------------------------------------------------------
+# masks (property-based)
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 24),
+    groups=st.integers(1, 12),
+    n_prune=st.integers(1, 3),
+    seed=st.integers(0, 2**30),
+)
+def test_nm_mask_valid_for_any_scores(rows, groups, n_prune, seed):
+    m_group = 4
+    if n_prune >= m_group:
+        return
+    sc = jax.random.normal(jax.random.key(seed), (rows, groups * m_group))
+    mask = masks_lib.nm_mask_from_scores(sc, n_prune, m_group)
+    assert masks_lib.validate_nm(np.asarray(mask), n_prune, m_group)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 64),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**30),
+)
+def test_unstructured_mask_exact_count(rows, cols, frac, seed):
+    sc = jax.random.normal(jax.random.key(seed), (rows, cols))
+    k = int(round(rows * cols * frac))
+    mask = masks_lib.unstructured_mask_from_scores(sc, k)
+    assert int(np.asarray(mask).sum()) == min(k, rows * cols)
+    # selected entries are exactly the k smallest scores
+    if 0 < k < rows * cols:
+        chosen = np.sort(np.asarray(sc)[np.asarray(mask)])
+        rest = np.asarray(sc)[~np.asarray(mask)]
+        assert chosen[-1] <= rest.min() + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(2, 48),
+    seed=st.integers(0, 2**30),
+    data=st.data(),
+)
+def test_padded_row_indices_roundtrip(rows, cols, seed, data):
+    per_row = data.draw(st.integers(0, cols))
+    sc = jax.random.normal(jax.random.key(seed), (rows, cols))
+    mask = masks_lib.unstructured_mask_rowwise(sc, per_row)
+    counts = np.asarray(mask).sum(1)
+    assert (counts == min(per_row, cols)).all()
+    k_max = masks_lib.bucket_k(int(counts.max())) if counts.max() else 4
+    k_max = min(k_max, cols)
+    idx, valid = masks_lib.padded_row_indices(mask, k_max)
+    rebuilt = np.zeros((rows, cols), bool)
+    idx_n, valid_n = np.asarray(idx), np.asarray(valid)
+    for i in range(rows):
+        rebuilt[i, idx_n[i][valid_n[i]]] = True
+    assert (rebuilt == np.asarray(mask)).all()
+
+
+# ----------------------------------------------------------------------
+# scores
+# ----------------------------------------------------------------------
+def test_score_shapes_and_orderings():
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (8, 32))
+    h = random_psd_hessian(jax.random.key(1), 32)
+    hinv = dampened_inverse(h)
+    for name in ("magnitude", "wanda", "obs", "sparsegpt"):
+        sc = scores.compute_score(name, w, h, hinv)
+        assert sc.shape == w.shape
+        assert bool(jnp.all(jnp.isfinite(sc)))
+        assert bool(jnp.all(sc >= 0))
+    # obs == Eq.14
+    ref = np.asarray(w) ** 2 / (2 * np.diag(np.asarray(hinv)))[None, :]
+    np.testing.assert_allclose(
+        np.asarray(scores.compute_score("obs", w, h, hinv)), ref, rtol=1e-5)
+
+
+def test_wanda_equals_magnitude_times_actnorm():
+    x = jax.random.normal(jax.random.key(2), (16, 100))
+    h = 2.0 * x @ x.T / 100
+    w = jax.random.normal(jax.random.key(3), (4, 16))
+    sc = scores.wanda_score(w, h)
+    norms = jnp.sqrt(jnp.sum(x * x, axis=1) / 100) * jnp.sqrt(2.0)
+    np.testing.assert_allclose(
+        np.asarray(sc), np.asarray(jnp.abs(w) * norms[None, :]), rtol=1e-5)

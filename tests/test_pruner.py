@@ -1,0 +1,117 @@
+"""Algorithm 1 (core.pruner): methods, sparsity exactness, orderings."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import random_psd_hessian
+from repro.core import masks as masks_lib
+from repro.core.pruner import METHODS, prune_matrix, reconstruction_error
+from repro.core.sparsity import SparsitySpec
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.key(0)
+    n, m = 32, 128
+    w = jax.random.normal(key, (n, m)) * (
+        1.0 + jnp.arange(m)[None, :] / m)     # mild column structure
+    h = random_psd_hessian(jax.random.key(1), m)
+    return w, h
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_nm_sparsity_exact(problem, method):
+    w, h = problem
+    res = prune_matrix(w, h, "2:4", method=method, blocksize=64)
+    assert masks_lib.validate_nm(np.asarray(res.mask), 2, 4)
+    assert bool(jnp.all(jnp.where(res.mask, res.w, 0.0) == 0.0))
+    assert abs(res.sparsity - 0.5) < 1e-6
+
+
+@pytest.mark.parametrize("method", ["magnitude", "wanda", "SS", "SM"])
+def test_unstructured_sparsity_exact(problem, method):
+    w, h = problem
+    res = prune_matrix(w, h, "0.5", method=method, blocksize=64)
+    n, m = w.shape
+    assert int(np.asarray(res.mask).sum()) == pytest.approx(
+        n * m // 2, abs=n)  # per-block rounding
+    assert bool(jnp.all(jnp.where(res.mask, res.w, 0.0) == 0.0))
+
+
+def test_m_mask_rejected_for_unstructured(problem):
+    w, h = problem
+    with pytest.raises(ValueError):
+        prune_matrix(w, h, "0.5", method="MM")
+
+
+def test_reconstruction_orderings(problem):
+    """The paper's central claim at layer level:
+    recon(SM) ≤ recon(SS) and recon(MM) ≤ recon(MS); compensated methods
+    beat score-only baselines."""
+    w, h = problem
+    errs = {}
+    for method in METHODS:
+        res = prune_matrix(w, h, "2:4", method=method, blocksize=64)
+        errs[method] = reconstruction_error(w, res.w, h)
+    assert errs["SM"] <= errs["SS"] * 1.01
+    assert errs["MM"] <= errs["MS"] * 1.01
+    assert errs["SM"] <= errs["wanda"]
+    assert errs["SM"] <= errs["magnitude"]
+    assert errs["SS"] <= errs["magnitude"]
+
+
+def test_unstructured_sm_beats_ss(problem):
+    w, h = problem
+    e = {}
+    for method in ("SS", "SM"):
+        res = prune_matrix(w, h, "0.5", method=method, blocksize=32)
+        e[method] = reconstruction_error(w, res.w, h)
+    assert e["SM"] <= e["SS"] * 1.01
+
+
+def test_blocksize_all_vs_blocks(problem):
+    """S=all (one block) must also satisfy SM ≤ SS; and both blockings
+    produce valid N:M masks."""
+    w, h = problem
+    m = w.shape[1]
+    for bs in (32, m):
+        r_ss = prune_matrix(w, h, "2:4", method="SS", blocksize=bs)
+        r_sm = prune_matrix(w, h, "2:4", method="SM", blocksize=bs)
+        assert reconstruction_error(w, r_sm.w, h) <= \
+            reconstruction_error(w, r_ss.w, h) * 1.01
+
+
+def test_row_balanced_traceable(problem):
+    """row_balanced unstructured pruning must be jit-able (static shapes,
+    no host sync) — the distributed row-parallel path depends on it."""
+    w, h = problem
+
+    @jax.jit
+    def run(w, h):
+        res = prune_matrix(w, h, SparsitySpec.parse("0.5"), method="SM",
+                           blocksize=64, row_balanced=True)
+        return res.w, res.mask
+
+    w_new, mask = run(w, h)
+    assert (np.asarray(mask).sum(1) == w.shape[1] // 2).all()
+    assert bool(jnp.all(jnp.where(mask, w_new, 0.0) == 0.0))
+
+
+def test_sm_compensation_updates_left_blocks(problem):
+    """SparseGPT freezes columns left of the current block; our SM must
+    keep refining them (the paper's fix). Verify some weight in block 0
+    changes again while pruning block 1."""
+    w, h = problem
+    res1 = prune_matrix(w, h, "2:4", method="SM", blocksize=64)
+    # prune only the first 64 columns (one block) by slicing: first-block
+    # compensation in isolation
+    res_first = prune_matrix(w[:, :128], h[:128, :128], "2:4", method="SM",
+                             blocksize=128)
+    # the first block's unpruned weights in the full run differ from the
+    # isolated run — proof the later block's solve updated them again
+    m0 = ~np.asarray(res1.mask)[:, :64]
+    a = np.asarray(res1.w)[:, :64][m0]
+    b = np.asarray(res_first.w)[:, :64][m0]
+    assert np.abs(a - b).max() > 1e-6

@@ -1,0 +1,94 @@
+"""Serving engine + the 2:4-sparse weight path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PruningEngine
+from repro.data import calibration_batches
+from repro.serve import Request, ServeEngine, sparsify_params
+
+
+def test_greedy_generation_deterministic(tiny_lm):
+    model, params, _ = tiny_lm
+    eng = ServeEngine(model, params, max_batch=4, max_len=64)
+    reqs = [Request(uid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                    max_new_tokens=6) for i in range(3)]
+    r1 = eng.generate(reqs)
+    r2 = eng.generate(reqs)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert len(a.tokens) == 6
+
+
+def test_batched_equals_single(tiny_lm):
+    """Batch-of-3 greedy decode == each request decoded alone."""
+    model, params, _ = tiny_lm
+    prompts = [np.asarray([1, 2, 3, 4], np.int32),
+               np.asarray([9, 8, 7, 6], np.int32),
+               np.asarray([5, 5, 5, 5], np.int32)]
+    eng = ServeEngine(model, params, max_batch=3, max_len=48)
+    batched = eng.generate(
+        [Request(uid=i, prompt=p, max_new_tokens=5)
+         for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        solo = eng.generate([Request(uid=0, prompt=p, max_new_tokens=5)])
+        np.testing.assert_array_equal(batched[i].tokens, solo[0].tokens)
+
+
+def test_eos_stops_early(tiny_lm):
+    model, params, _ = tiny_lm
+    eng = ServeEngine(model, params, max_batch=2, max_len=64)
+    # find the greedy first token, then use it as "eos"
+    probe = eng.generate(
+        [Request(uid=0, prompt=np.asarray([3, 1], np.int32),
+                 max_new_tokens=1)])
+    eos = int(probe[0].tokens[0])
+    eng2 = ServeEngine(model, params, max_batch=2, max_len=64, eos_id=eos)
+    res = eng2.generate(
+        [Request(uid=0, prompt=np.asarray([3, 1], np.int32),
+                 max_new_tokens=8)])
+    assert len(res[0].tokens) == 1 and int(res[0].tokens[0]) == eos
+
+
+def test_sparse_serving_matches_dense(tiny_lm):
+    """2:4-prune → pack → nm_spmm serving path produces the SAME greedy
+    tokens as the dense pruned model (kernel integration end-to-end)."""
+    model, params, _ = tiny_lm
+    calib = calibration_batches(model.cfg, n_samples=8, seq_len=64, batch=8)
+    eng = PruningEngine(model, "2:4", method="SM", blocksize=64)
+    pruned, _ = eng.run(params, calib)
+    packed = sparsify_params(pruned, patterns=(r"mlp/(wi|wg|wo)$",))
+
+    # packed leaves actually exist (layer-stacked: one per linear kind)
+    n_packed = sum(1 for l in jax.tree.leaves(
+        packed, is_leaf=lambda x: isinstance(x, dict) and "vals" in x)
+        if isinstance(l, dict) and "vals" in l)
+    assert n_packed == 3
+
+    prompts = [np.asarray([2, 4, 6, 8], np.int32)]
+    dense_eng = ServeEngine(model, pruned, max_batch=1, max_len=32)
+    sparse_eng = ServeEngine(model, packed, max_batch=1, max_len=32)
+    d = dense_eng.generate([Request(0, prompts[0], max_new_tokens=4)])
+    s = sparse_eng.generate([Request(0, prompts[0], max_new_tokens=4)])
+    np.testing.assert_array_equal(d[0].tokens, s[0].tokens)
+
+
+def test_sparsify_skips_non_sparse(tiny_lm):
+    """Dense (unpruned) weights must pass through unpacked."""
+    model, params, _ = tiny_lm
+    packed = sparsify_params(params)
+    assert not any(
+        isinstance(l, dict) and "vals" in l
+        for l in jax.tree.leaves(
+            packed, is_leaf=lambda x: isinstance(x, dict) and "vals" in x))
+
+
+def test_temperature_sampling_runs(tiny_lm):
+    model, params, _ = tiny_lm
+    eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                      temperature=1.0)
+    res = eng.generate([Request(uid=0, prompt=np.asarray([1, 2], np.int32),
+                                max_new_tokens=5)])
+    assert len(res[0].tokens) == 5
