@@ -17,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import SparsitySpec, current_ctx, prune_matrix, use_mesh
 from repro.core.distributed import hessian_allreduce, prune_matrix_sharded
 from repro.core.hessian import HessianAccumulator
-from repro.core.pruner import prune_matrix
-from repro.core.sparsity import SparsitySpec
 
 
 def main():
@@ -30,27 +29,34 @@ def main():
     key = jax.random.key(0)
     w = jax.random.normal(key, (n, m)) * 0.1
 
-    # 1. data-parallel calibration: each data shard accumulates its own
-    #    Hessian over its calibration tokens, then one psum merges them.
-    shards = []
-    for i in range(2):
-        acc = HessianAccumulator(m)
-        acc.update(jax.random.normal(jax.random.fold_in(key, i),
-                                     (m, 256 + 64 * i)))
-        shards.append(acc)
-    h = hessian_allreduce(
-        mesh, jnp.stack([a.h for a in shards]),
-        jnp.stack([a.count for a in shards]))
-    print(f"merged Hessian from {len(shards)} data shards")
+    with use_mesh(mesh):
+        ctx = current_ctx()
+        print(f"active context: dp={ctx.dp} over {ctx.dp_axes}, "
+              f"tp={ctx.tp} over {ctx.tp_axis!r}")
 
-    # 2. row-parallel MRP prune over the `model` axis — zero collectives
-    #    inside the layer (rows are independent, Remark 4.2)
-    t0 = time.monotonic()
-    w_sh, mask_sh = prune_matrix_sharded(w, h, "2:4", mesh, method="SM",
-                                         blocksize=64)
-    t_sh = time.monotonic() - t0
+        # 1. data-parallel calibration: each data shard accumulates its
+        #    own Hessian over its calibration tokens, one psum merges
+        #    them.  The mesh resolves from the context — no mesh arg.
+        shards = []
+        for i in range(2):
+            acc = HessianAccumulator(m)
+            acc.update(jax.random.normal(jax.random.fold_in(key, i),
+                                         (m, 256 + 64 * i)))
+            shards.append(acc)
+        h = hessian_allreduce(
+            None, jnp.stack([a.h for a in shards]),
+            jnp.stack([a.count for a in shards]))
+        print(f"merged Hessian from {len(shards)} data shards")
 
-    # 3. single-device reference
+        # 2. row-parallel MRP prune over the `model` axis — zero
+        #    collectives inside the layer (rows are independent,
+        #    Remark 4.2); again the context supplies the mesh.
+        t0 = time.monotonic()
+        w_sh, mask_sh = prune_matrix_sharded(w, h, "2:4", method="SM",
+                                             blocksize=64)
+        t_sh = time.monotonic() - t0
+
+    # 3. single-device reference (outside the context)
     res = prune_matrix(w, h, SparsitySpec.parse("2:4"), method="SM",
                        blocksize=64, row_balanced=True)
     diff = float(jnp.abs(w_sh - res.w).max())

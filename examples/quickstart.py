@@ -10,7 +10,7 @@ reconstruction error ‖δw·x‖² — the paper's objective (Eq. 3).
 import jax
 import jax.numpy as jnp
 
-from repro.core import HessianAccumulator, SparsitySpec, prune_matrix
+from repro import HessianAccumulator, SparsitySpec, prune_matrix
 from repro.core.pruner import reconstruction_error
 
 key = jax.random.key(0)

@@ -9,3 +9,23 @@ pruning/training/serving, and Pallas TPU kernels for the hot paths.
 """
 
 __version__ = "1.0.0"
+
+from repro.core import (
+    HessianAccumulator,
+    PruneResult,
+    PruningEngine,
+    SparsitySpec,
+    prune_matrix,
+)
+from repro.dist import current_ctx, use_mesh
+
+__all__ = [
+    "HessianAccumulator",
+    "PruneResult",
+    "PruningEngine",
+    "SparsitySpec",
+    "prune_matrix",
+    "current_ctx",
+    "use_mesh",
+    "__version__",
+]

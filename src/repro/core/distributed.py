@@ -16,6 +16,10 @@ pruned set and the (replicated) inverse Hessian.  We exploit it with
 
 No collective happens inside a layer's solve — the only communication in
 the whole pruning pass is the Hessian psum, once per linear.
+
+Both entry points resolve the mesh from the active ``repro.dist`` context
+when one is not passed explicitly — inside ``use_mesh(mesh)`` the call
+sites never thread a mesh by hand.
 """
 
 from __future__ import annotations
@@ -25,10 +29,23 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.pruner import prune_matrix
 from repro.core.sparsity import SparsitySpec
+from repro.dist import current_ctx, shard_map
+from repro.dist.sharding import replicated, row_sharding
+
+
+def _resolve_mesh(mesh: Optional[Mesh]) -> Mesh:
+    if mesh is not None:
+        return mesh
+    ctx = current_ctx()
+    if ctx is None:
+        raise ValueError(
+            "no mesh given and no active device context — pass mesh= or "
+            "call inside repro.dist.use_mesh(mesh)")
+    return ctx.mesh
 
 
 # ----------------------------------------------------------------------
@@ -47,16 +64,19 @@ def psum_hessian(
 
 
 def hessian_allreduce(
-    mesh: Mesh, h_shards: jax.Array, counts: jax.Array, axis_name: str = "data"
+    mesh: Optional[Mesh], h_shards: jax.Array, counts: jax.Array,
+    axis_name: str = "data"
 ) -> jax.Array:
     """Host-level convenience: merge per-shard Hessians stacked on axis 0.
 
-    h_shards: (n_shards, m, m) placed along ``axis_name``; counts: (n_shards,).
+    h_shards: (n_shards, m, m) placed along ``axis_name``; counts:
+    (n_shards,).  ``mesh=None`` resolves the active context's mesh.
     """
+    mesh = _resolve_mesh(mesh)
     ax = axis_name
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(ax), P(ax)),
         out_specs=P(),
@@ -76,7 +96,7 @@ def prune_matrix_sharded(
     w: jax.Array,
     h: jax.Array,
     spec: SparsitySpec | str,
-    mesh: Mesh,
+    mesh: Optional[Mesh] = None,
     method: str = "SM",
     blocksize: int = 128,
     gamma: float = 0.01,
@@ -88,8 +108,10 @@ def prune_matrix_sharded(
 
     Rows (output channels) are sharded over ``model_axis``; ``h`` is
     replicated.  Each shard runs the identical traceable pruning pass on
-    its rows — zero collectives (Remark 4.2).
+    its rows — zero collectives (Remark 4.2).  ``mesh=None`` resolves the
+    active ``repro.dist`` context's mesh.
     """
+    mesh = _resolve_mesh(mesh)
     if isinstance(spec, str):
         spec = SparsitySpec.parse(spec)
     n, m = w.shape
@@ -111,13 +133,13 @@ def prune_matrix_sharded(
         )
         return res.w, res.mask
 
-    fn = jax.shard_map(
+    fn = shard_map(
         _local,
         mesh=mesh,
         in_specs=(P(model_axis, None), P(None, None)),
         out_specs=(P(model_axis, None), P(model_axis, None)),
         check_vma=False,
     )
-    w_sh = jax.device_put(w, NamedSharding(mesh, P(model_axis, None)))
-    h_rep = jax.device_put(h, NamedSharding(mesh, P(None, None)))
+    w_sh = jax.device_put(w, row_sharding(mesh, model_axis))
+    h_rep = jax.device_put(h, replicated(mesh))
     return fn(w_sh, h_rep)

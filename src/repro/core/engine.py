@@ -20,6 +20,11 @@ Model contract (duck-typed; implemented by models/):
 Fault tolerance: pass ``progress_store`` (ckpt.PruneProgressStore) and the
 engine checkpoints (segment index, params) after every segment; ``run``
 resumes from the last completed segment automatically.
+
+Distribution: pass ``mesh=`` or construct the engine inside
+``repro.dist.use_mesh(mesh)`` and every divisible layer solve runs
+row-parallel over the mesh's ``model`` axis (core.distributed,
+Remark 4.2); without a mesh the engine is the paper's host-driven loop.
 """
 
 from __future__ import annotations
@@ -90,6 +95,7 @@ class PruningEngine:
         row_balanced: bool = False,
         skip: Sequence[str] = (),
         progress_store=None,
+        mesh=None,
     ):
         self.model = model
         self.spec = SparsitySpec.parse(spec) if isinstance(spec, str) else spec
@@ -101,10 +107,47 @@ class PruningEngine:
         self.row_balanced = row_balanced
         self.skip = tuple(skip)
         self.progress_store = progress_store
+        if mesh is None:
+            from repro.dist import current_ctx
+
+            ctx = current_ctx()
+            mesh = ctx.mesh if ctx is not None else None
+        self.mesh = mesh
 
     # ------------------------------------------------------------------
     def _should_skip(self, name: str) -> bool:
         return any(pat in name for pat in self.skip)
+
+    def _model_parallel(self) -> int:
+        """Shards available for the row-parallel layer solve."""
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape["model"]
+
+    def _prune_one(self, w: jax.Array, hmat: jax.Array) -> PruneResult:
+        """One layer solve — row-parallel over the mesh's ``model`` axis
+        when active and the rows divide (Remark 4.2), else local.
+
+        The sharded path selects masks per-row (its static-shape
+        requirement), so unstructured specs only take it when the engine
+        was configured ``row_balanced`` — a global-top-k request must not
+        silently change selection semantics under a mesh."""
+        tp = self._model_parallel()
+        if (tp > 1 and w.ndim == 2 and w.shape[0] % tp == 0
+                and (self.spec.is_semi_structured or self.row_balanced)):
+            from repro.core.distributed import prune_matrix_sharded
+
+            w_new, mask = prune_matrix_sharded(
+                w, hmat, self.spec, self.mesh, method=self.method,
+                blocksize=self.blocksize, gamma=self.gamma,
+                score=self.score, row_chunk=self.row_chunk)
+            return PruneResult(
+                w_new, mask, reconstruction_error(w, w_new, hmat),
+                self.method, self.spec)
+        return prune_matrix(
+            w, hmat, self.spec, method=self.method,
+            blocksize=self.blocksize, gamma=self.gamma, score=self.score,
+            row_chunk=self.row_chunk, row_balanced=self.row_balanced)
 
     def run(
         self, params: Any, calib_batches: Sequence[Any]
@@ -156,17 +199,7 @@ class PruningEngine:
                 w = lin.get(seg_params)
                 hmat = calib.hessian(lin.name)
                 t0 = time.monotonic()
-                res: PruneResult = prune_matrix(
-                    w,
-                    hmat,
-                    self.spec,
-                    method=self.method,
-                    blocksize=self.blocksize,
-                    gamma=self.gamma,
-                    score=self.score,
-                    row_chunk=self.row_chunk,
-                    row_balanced=self.row_balanced,
-                )
+                res: PruneResult = self._prune_one(w, hmat)
                 seg_params = lin.set(seg_params, res.w)
                 reports.append(
                     LinearReport(

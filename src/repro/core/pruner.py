@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,7 @@ class PruneResult:
     loss: float           # Σ Eq.(12) losses (or method analogue)
     method: str
     spec: SparsitySpec
-    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def sparsity(self) -> float:
@@ -177,7 +177,11 @@ def prune_matrix(
     per_blk = spec.pruned_per_row_block(blocksize) if static_rows else None
     mask_acc = jnp.zeros((n, m), bool)
     w_cur = w
-    total_loss = 0.0
+    # Per-block Eq. (12) losses.  Each block's solve is against the FULL
+    # accumulated mask, so entry b supersedes entry b-1 (it re-solves the
+    # earlier blocks' weights too) — the honest scalar summary is the
+    # FINAL solve's loss, not a sum or a silently-overwritten "total".
+    block_losses = []
     for b in range(nblocks):
         c0 = b * blocksize
         wblk = jax.lax.dynamic_slice(w_cur, (0, c0), (n, blocksize))
@@ -195,12 +199,16 @@ def prune_matrix(
         w_cur, loss_rows = mrp.mrp_compensate_mask(
             w_cur, hinv, mask_acc, k_max=k_max, row_chunk=row_chunk
         )
-        total_loss = jnp.sum(loss_rows)  # loss of the latest solve
+        block_losses.append(jnp.sum(loss_rows))
     return PruneResult(
         w_cur,
         mask_acc,
         _maybe_float(reconstruction_error_traced(w0, w_cur, h)),
         method,
         spec,
-        stats={"mrp_loss": total_loss},
+        stats={
+            "final_mrp_loss": _maybe_float(block_losses[-1]),
+            "block_mrp_losses": tuple(
+                _maybe_float(l) for l in block_losses),
+        },
     )

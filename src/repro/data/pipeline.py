@@ -5,8 +5,9 @@ the fault-tolerant trainer resumes by simply continuing the step counter
 (no iterator state to checkpoint, no data replay drift), and a straggler
 -skipped step can be re-assigned deterministically.
 
-When a mesh is provided, batches are placed with the batch dim sharded
-over the data(+pod) axes.
+When a mesh is provided — explicitly, or resolved from the active
+``repro.dist`` context at construction — batches are placed with the
+batch dim sharded over the data(+pod) axes (rules: dist.sharding).
 """
 
 from __future__ import annotations
@@ -33,14 +34,22 @@ class DataPipeline:
         seq_len: int,
         seed: int = 0,
         mesh=None,
-        dp_axes: Sequence[str] = ("data",),
+        dp_axes: Optional[Sequence[str]] = None,
     ):
         self.cfg = cfg
         self.global_batch = global_batch
         self.seq_len = seq_len
         self.corpus = MarkovCorpus(cfg.vocab_size, seed=seed)
+        if mesh is None:
+            from repro.dist import current_ctx
+
+            ctx = current_ctx()
+            if ctx is not None:
+                mesh = ctx.mesh
+                if dp_axes is None:
+                    dp_axes = ctx.dp_axes
         self.mesh = mesh
-        self.dp_axes = tuple(dp_axes)
+        self.dp_axes = tuple(dp_axes) if dp_axes is not None else ("data",)
 
     # ------------------------------------------------------------------
     def _finish(self, batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:

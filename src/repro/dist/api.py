@@ -1,0 +1,117 @@
+"""Device-context API: ``use_mesh`` / ``current_ctx`` / ``constrain``.
+
+The context is an ambient, thread-local stack: code that cares about
+distribution asks ``current_ctx()`` and gets either a :class:`DistContext`
+(inside ``use_mesh``) or ``None`` — in which case every call site degrades
+to a single-device no-op.  That one convention is what lets the same
+model / trainer / pruner / server code run unchanged on a laptop CPU and
+on a 512-chip multi-pod mesh.
+
+Lifecycle (see docs/dist_api.md):
+
+    mesh = make_production_mesh()
+    with use_mesh(mesh):                # activates ctx + enters mesh for jit
+        ctx = current_ctx()             # DistContext(mesh, dp_axes, ...)
+        y = constrain(x, ctx.dp_axes)   # sharding constraint (no-op outside)
+    current_ctx()                       # -> None again
+
+Contexts nest: an inner ``use_mesh`` shadows the outer one and exiting it
+restores the outer context exactly (tested in tests/test_dist_api.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Iterator, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    stack = getattr(_local, "stack", None)
+    if stack is None:
+        stack = _local.stack = []
+    return stack
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """Active device context: the mesh plus the axis-role assignment.
+
+    ``dp_axes`` are the batch/FSDP axes (``("pod", "data")`` on a
+    multi-pod mesh, ``("data",)`` otherwise); ``tp_axis`` is the
+    tensor/expert-parallel axis (``None`` when the mesh has no ``model``
+    axis).  ``dp`` / ``tp`` are the corresponding total shard counts.
+    """
+
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    tp_axis: Optional[str]
+
+    @property
+    def dp(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def tp(self) -> int:
+        if self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+def current_ctx() -> Optional[DistContext]:
+    """The innermost active :class:`DistContext`, or ``None`` outside any
+    ``use_mesh`` — callers treat ``None`` as "single device, do nothing"."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(
+    mesh: Mesh,
+    dp_axes: Optional[Sequence[str]] = None,
+    tp_axis: Optional[str] = "model",
+) -> Iterator[DistContext]:
+    """Activate ``mesh`` as the ambient device context (and enter it for
+    jit, so bare-PartitionSpec shardings resolve against it).
+
+    ``dp_axes`` defaults to the batch axes present in the mesh
+    (``pod``/``data``); ``tp_axis`` degrades to ``None`` when the mesh
+    has no such axis, so host meshes like ``(8,) ("data",)`` work too.
+    """
+    from repro.dist.mesh import dp_axes_of
+
+    if dp_axes is None:
+        dp_axes = dp_axes_of(mesh)
+    if tp_axis is not None and tp_axis not in mesh.axis_names:
+        tp_axis = None
+    ctx = DistContext(mesh, tuple(dp_axes), tp_axis)
+    _stack().append(ctx)
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _stack().pop()
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Sharding-constraint wrapper: ``constrain(x, "data", None)`` pins
+    ``x``'s layout on the active mesh; without an active context it
+    returns ``x`` untouched (single-device no-op).
+
+    Spec entries follow PartitionSpec: an axis name, a tuple of axis
+    names (one array dim over several mesh axes), or ``None``.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, PartitionSpec(*spec)))

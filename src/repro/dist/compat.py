@@ -1,0 +1,52 @@
+"""Version bridge for ``shard_map`` across jax API generations.
+
+jax ≥ 0.6 exposes ``jax.shard_map`` with a ``check_vma`` flag; 0.4.x has
+``jax.experimental.shard_map.shard_map`` with the equivalent flag named
+``check_rep``.  All repro call sites import :func:`shard_map` from here
+(or from ``repro.dist``) so the rest of the codebase is written against
+one signature.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+
+
+def shard_map(
+    f: Optional[Callable] = None,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """``jax.shard_map`` with the modern keyword signature on any
+    installed jax.  Usable directly or as ``functools.partial``-style
+    decorator (``shard_map(mesh=..., in_specs=..., out_specs=...)(f)``).
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as one flat dict on any jax: 0.4.x
+    returns a one-entry list of per-device dicts, newer jax the dict
+    itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

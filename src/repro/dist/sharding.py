@@ -1,0 +1,222 @@
+"""Sharding rules: every param/batch PartitionSpec in repro comes from
+here (docs/dist_api.md).  No other module constructs NamedSharding /
+PartitionSpec rules for params or batches ad hoc.
+
+Layout policy (all assignments guarded by divisibility — a dim that does
+not divide its mesh axes stays replicated, so any model is *correct* on
+any mesh and merely less sharded when shapes don't line up):
+
+  - linear kernels are stored (in, out).  Up-projections (wq/wk/wv/wi/
+    wg/in_proj/…) are column-parallel: out dim over ``model``; the
+    matching down-projections (wo/out_proj) are row-parallel: in dim
+    over ``model`` — the Megatron pairing, one all-reduce per block;
+  - FSDP shards the remaining matrix dim over ``fsdp_axes`` (the data
+    (+pod) axes).  ``fsdp_exclude`` path patterns opt params out —
+    :data:`FSDP_EXCLUDE_EMBED` keeps the embedding/LM-head resident
+    (their per-step FSDP all-gather dominates the wire otherwise);
+  - MoE expert stacks (E, d, f) shard experts over ``model``; with
+    ``serve_moe=True`` additionally d_ff over ``data`` (2-D expert
+    sharding — trillion-param MoEs fit resident at serve time);
+  - embeddings (V, D) are vocab-parallel over ``model``; the router and
+    all vectors (norm scales, biases) replicate;
+  - stacked-layer subtrees ("layers/…", "enc/layers/…") carry a leading
+    lax.scan dim that is never sharded;
+  - batches shard dim 0 over the data (+pod) axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path
+
+from repro.dist.mesh import dp_axes_of
+
+# Param-path patterns kept out of FSDP: the tied/untied embedding matrix
+# and the LM head (used with OptFlags.fsdp_embed_fix, §Perf iteration 1).
+FSDP_EXCLUDE_EMBED: Tuple[str, ...] = ("embed/tok", "unembed/head")
+
+# (in, out) kernels whose OUT dim is model-parallel (column-parallel).
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "wi", "wg", "wz", "wf", "wo_gate",
+    "in_proj", "dt_proj", "x_proj", "frontend_proj", "head",
+})
+# (in, out) kernels whose IN dim is the model-parallel contraction.
+_ROW_PARALLEL = frozenset({"wo", "out_proj"})
+# Always replicated regardless of shape (f32 router: tiny and
+# load-balance sensitive — sharding it buys nothing).
+_REPLICATED = frozenset({"router"})
+
+# Subtrees stacked over a leading lax.scan layer dim.
+_STACKED_PREFIXES = ("layers/", "enc/layers/")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _entry(axes: Sequence[str]):
+    """PartitionSpec entry for one array dim over 1+ mesh axes."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ----------------------------------------------------------------------
+# Param rules
+# ----------------------------------------------------------------------
+def param_specs(
+    params: Any,
+    mesh: Mesh,
+    *,
+    fsdp_axes: Sequence[str] = (),
+    fsdp_exclude: Sequence[str] = (),
+    tp_axis: str = "model",
+    serve_moe: bool = False,
+) -> Any:
+    """PartitionSpec pytree for a param tree under the layout policy
+    above.  ``fsdp_axes=()`` disables FSDP (tensor-parallel only —
+    the resident-weights serving configuration)."""
+    fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+    dp_size = _axes_size(mesh, fsdp_axes) if fsdp_axes else 1
+    tp_axes = (tp_axis,) if tp_axis in mesh.axis_names else ()
+    tp = mesh.shape[tp_axis] if tp_axes else 1
+    data_axes = ("data",) if "data" in mesh.axis_names else ()
+    data_size = mesh.shape["data"] if data_axes else 1
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        key = name.rsplit("/", 1)[-1]
+        shape = tuple(leaf.shape)
+        lead = 1 if name.startswith(_STACKED_PREFIXES) else 0
+        base = shape[lead:]
+        entries: list = [None] * len(base)
+        excluded = any(pat in name for pat in fsdp_exclude)
+        fsdp = fsdp_axes if (fsdp_axes and not excluded) else ()
+
+        def put(dim: int, axes: Sequence[str], size: int) -> bool:
+            if axes and entries[dim] is None and base[dim] % size == 0:
+                entries[dim] = _entry(axes)
+                return True
+            return False
+
+        is_expert = (len(base) == 3 and key in ("wi", "wg", "wo")
+                     and "moe" in name.split("/"))
+        if is_expert:
+            put(0, tp_axes, tp)                       # experts × model
+            f_dim, d_dim = (1, 2) if key == "wo" else (2, 1)
+            if serve_moe:
+                put(f_dim, data_axes, data_size)      # d_ff × data (2-D)
+            else:
+                put(d_dim, fsdp, dp_size)
+        elif key == "tok" and len(base) == 2:
+            put(0, tp_axes, tp)                       # vocab-parallel
+            put(1, fsdp, dp_size)
+        elif len(base) == 2 and key in _COL_PARALLEL:
+            put(1, tp_axes, tp)
+            put(0, fsdp, dp_size)
+        elif len(base) == 2 and key in _ROW_PARALLEL:
+            put(0, tp_axes, tp)
+            put(1, fsdp, dp_size)
+        elif key in _REPLICATED or len(base) < 2:
+            pass                                      # replicate
+        else:
+            put(0, fsdp, dp_size)                     # generic FSDP
+        if not any(e is not None for e in entries):
+            return P()
+        return P(*([None] * lead), *entries)
+
+    return tree_map_with_path(spec_for, params)
+
+
+def param_shardings(
+    params: Any,
+    mesh: Mesh,
+    fsdp_axes: Sequence[str] = (),
+    **kwargs,
+) -> Any:
+    """NamedSharding pytree over :func:`param_specs` (same keywords)."""
+    return named_shardings(
+        mesh, param_specs(params, mesh, fsdp_axes=fsdp_axes, **kwargs))
+
+
+def shard_params(
+    params: Any,
+    mesh: Optional[Mesh] = None,
+    fsdp_axes: Sequence[str] = (),
+    **kwargs,
+) -> Any:
+    """Place a param tree onto the mesh under the standard rules.
+
+    ``mesh=None`` resolves the active context's mesh (and its dp_axes as
+    the FSDP axes unless given); with no context the params are returned
+    unplaced — the single-device no-op.
+    """
+    if mesh is None:
+        from repro.dist.api import current_ctx
+
+        ctx = current_ctx()
+        if ctx is None:
+            return params
+        mesh = ctx.mesh
+        if not fsdp_axes:
+            fsdp_axes = ctx.dp_axes
+    return jax.device_put(
+        params, param_shardings(params, mesh, fsdp_axes, **kwargs))
+
+
+# ----------------------------------------------------------------------
+# Batch rules
+# ----------------------------------------------------------------------
+def batch_spec(mesh: Mesh, dp_axes: Optional[Sequence[str]] = None) -> P:
+    """Batch PartitionSpec: dim 0 over the data (+pod) axes, the rest
+    replicated (trailing dims are unconstrained in PartitionSpec)."""
+    if dp_axes is None:
+        dp_axes = dp_axes_of(mesh)
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    if not dp_axes:
+        return P()
+    return P(_entry(dp_axes))
+
+
+def batch_sharding(
+    mesh: Mesh, dp_axes: Optional[Sequence[str]] = None
+) -> NamedSharding:
+    """NamedSharding twin of :func:`batch_spec`."""
+    return NamedSharding(mesh, batch_spec(mesh, dp_axes))
+
+
+# ----------------------------------------------------------------------
+# Generic helpers
+# ----------------------------------------------------------------------
+def named_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """Wrap a PartitionSpec pytree (e.g. from :func:`param_specs` or
+    ``LM.cache_specs``) into NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding on ``mesh``."""
+    return NamedSharding(mesh, P())
+
+
+def row_sharding(mesh: Mesh, axis: str = "model",
+                 ndim: int = 2) -> NamedSharding:
+    """Dim 0 over ``axis``, the rest replicated — the layout of the
+    row-parallel layer solve (core.distributed, Remark 4.2)."""
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))

@@ -30,10 +30,15 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs as cfglib
-from repro.dist.sharding import batch_spec, param_specs
+from repro.dist.compat import cost_analysis_dict
+from repro.dist.sharding import (
+    batch_sharding,
+    named_shardings,
+    param_specs,
+    replicated,
+)
 from repro.launch.mesh import dp_axes_of, make_production_mesh
 from repro.models.transformer import LM
 from repro.optim import AdamW
@@ -44,12 +49,6 @@ from repro.utils.hlo import collective_bytes
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s/link
-
-
-def _ns(mesh, spec_tree):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s), spec_tree,
-        is_leaf=lambda x: isinstance(x, P))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,13 +122,12 @@ def build_lowerable(arch_id: str, shape: str, mesh, *,
         params, mesh, fsdp_axes=fsdp_axes,
         fsdp_exclude=FSDP_EXCLUDE_EMBED if opt.fsdp_embed_fix else (),
         serve_moe=(sp.kind != "train" and opt.serve_moe_2d))
-    psh = _ns(mesh, pspec)
+    psh = named_shardings(mesh, pspec)
     # batch < #data-shards (long_500k): replicate batch, shard the cache's
     # sequence dim over data instead (context parallelism)
     seq_shard = sp.global_batch % dp_total != 0
-    bsh = (NamedSharding(mesh, P()) if seq_shard
-           else NamedSharding(mesh, batch_spec(mesh, dp)))
-    rep = NamedSharding(mesh, P())
+    bsh = replicated(mesh) if seq_shard else batch_sharding(mesh, dp)
+    rep = replicated(mesh)
 
     if sp.kind == "train":
         optimizer = AdamW(lr=1e-4, moment_dtype="bfloat16")
@@ -147,7 +145,7 @@ def build_lowerable(arch_id: str, shape: str, mesh, *,
         def prefill_step(params, batch, cache):
             return model.prefill(params, batch, cache)
         cache = specs["cache"]
-        csh = _ns(mesh, model.cache_specs(mesh, dp, seq_shard=seq_shard,
+        csh = named_shardings(mesh, model.cache_specs(mesh, dp, seq_shard=seq_shard,
                                           prefer_seq=opt.seq_cache))
         batch = {k: v for k, v in specs.items() if k != "cache"}
         args = (params, batch, cache)
@@ -157,7 +155,7 @@ def build_lowerable(arch_id: str, shape: str, mesh, *,
     # decode
     def serve_step(params, token, cache, pos):
         return model.decode_step(params, token, cache, pos)
-    csh = _ns(mesh, model.cache_specs(mesh, dp, seq_shard=seq_shard,
+    csh = named_shardings(mesh, model.cache_specs(mesh, dp, seq_shard=seq_shard,
                                       prefer_seq=opt.seq_cache))
     args = (params, specs["token"], specs["cache"], specs["pos"])
     shardings = (psh, bsh, csh, rep)
@@ -219,7 +217,7 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool,
             opt=opt)
         t_compile = time.monotonic() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
 
         # --- trip-count-scaled collective census --------------------------
         # Collectives inside scan bodies appear once in the HLO text; the

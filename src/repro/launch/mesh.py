@@ -1,30 +1,16 @@
-"""Production mesh construction (functions only — importing this module
-never touches jax device state; jax locks the device count on first use,
-and the dry-run must set XLA_FLAGS before that happens)."""
+"""Back-compat shim: mesh construction lives in :mod:`repro.dist.mesh`
+(still functions only — importing never touches jax device state)."""
 
-from __future__ import annotations
+from repro.dist.mesh import (  # noqa: F401
+    dp_axes_of,
+    make_host_mesh,
+    make_production_mesh,
+    mesh_from_spec,
+)
 
-from typing import Tuple
-
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16×16 single pod (256 chips) or 2×16×16 (512 chips, 2 pods).
-
-    Axes: ``pod`` (DCN, gradient/batch outer axis), ``data`` (batch +
-    FSDP), ``model`` (tensor/expert parallel).
-    """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def dp_axes_of(mesh) -> Tuple[str, ...]:
-    """The batch-sharding axes of a production mesh."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-
-def make_host_mesh():
-    """1×1 mesh over the local device (CPU tests of mesh-aware code)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+__all__ = [
+    "dp_axes_of",
+    "make_host_mesh",
+    "make_production_mesh",
+    "mesh_from_spec",
+]

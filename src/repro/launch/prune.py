@@ -21,6 +21,7 @@ from repro.ckpt import CheckpointStore, PruneProgressStore, save_pytree
 from repro.core import PruningEngine
 from repro.core.engine import summarize
 from repro.data import DataPipeline, calibration_batches
+from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
 
 
@@ -58,28 +59,32 @@ def main() -> None:
     ap.add_argument("--calib-samples", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=64)
     ap.add_argument("--out", default="/tmp/repro_pruned")
+    add_mesh_argument(ap)
     args = ap.parse_args()
 
     cfg = (cfglib.get_smoke(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
-    model = LM(cfg)
-    params = load_trained_params(model, args.ckpt)
-    pipe = DataPipeline(cfg, 16, args.calib_seq, seed=0)
-    print(f"dense ppl: {eval_ppl(model, params, pipe):.4f}")
+    with mesh_context(args.mesh):
+        model = LM(cfg)
+        params = load_trained_params(model, args.ckpt)
+        pipe = DataPipeline(cfg, 16, args.calib_seq, seed=0)
+        print(f"dense ppl: {eval_ppl(model, params, pipe):.4f}")
 
-    calib = calibration_batches(
-        cfg, n_samples=args.calib_samples, seq_len=args.calib_seq)
-    engine = PruningEngine(
-        model, args.sparsity, method=args.method,
-        blocksize=args.blocksize, gamma=args.gamma,
-        progress_store=PruneProgressStore(args.out))
-    pruned, reports = engine.run(params, calib)
-    s = summarize(reports)
-    print(f"pruned {s['linears']} linears, mean sparsity "
-          f"{s['mean_sparsity']:.3f}, total recon error "
-          f"{s['total_recon_error']:.4f}")
-    print(f"{args.method} {args.sparsity} ppl: "
-          f"{eval_ppl(model, pruned, pipe):.4f}")
+        calib = calibration_batches(
+            cfg, n_samples=args.calib_samples, seq_len=args.calib_seq)
+        # the engine resolves the active mesh: layer solves run
+        # row-parallel over the `model` axis when one is present
+        engine = PruningEngine(
+            model, args.sparsity, method=args.method,
+            blocksize=args.blocksize, gamma=args.gamma,
+            progress_store=PruneProgressStore(args.out))
+        pruned, reports = engine.run(params, calib)
+        s = summarize(reports)
+        print(f"pruned {s['linears']} linears, mean sparsity "
+              f"{s['mean_sparsity']:.3f}, total recon error "
+              f"{s['total_recon_error']:.4f}")
+        print(f"{args.method} {args.sparsity} ppl: "
+              f"{eval_ppl(model, pruned, pipe):.4f}")
     save_pytree(os.path.join(args.out, "pruned_params"), pruned,
                 extra={"method": args.method, "sparsity": args.sparsity})
     print(f"saved to {args.out}/pruned_params")

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.ckpt import load_pytree
+from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
 from repro.serve import Request, ServeEngine, sparsify_params
 
@@ -31,36 +32,40 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    add_mesh_argument(ap)
     args = ap.parse_args()
 
     cfg = (cfglib.get_smoke(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
-    model = LM(cfg)
-    if args.params:
-        tpl = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
-                           jax.eval_shape(model.init, jax.random.key(0)))
-        params, extra = load_pytree(args.params, tpl)
-        params = jax.tree.map(jnp.asarray, params)
-        print(f"loaded params ({extra})")
-    else:
-        params = model.init(jax.random.key(0))
-    if args.sparse:
-        params = sparsify_params(params)
-        print("packed 2:4-sparse weights (nm_spmm path)")
+    with mesh_context(args.mesh):
+        model = LM(cfg)
+        if args.params:
+            tpl = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
+                               jax.eval_shape(model.init, jax.random.key(0)))
+            params, extra = load_pytree(args.params, tpl)
+            params = jax.tree.map(jnp.asarray, params)
+            print(f"loaded params ({extra})")
+        else:
+            params = model.init(jax.random.key(0))
+        if args.sparse:
+            params = sparsify_params(params)
+            print("packed 2:4-sparse weights (nm_spmm path)")
 
-    eng = ServeEngine(model, params, max_batch=8, max_len=args.max_len,
-                      temperature=args.temperature)
-    rng = np.random.default_rng(0)
-    reqs = [
-        Request(uid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=8,
-                                    dtype=np.int32),
-                max_new_tokens=args.max_new)
-        for i in range(args.requests)
-    ]
-    t0 = time.monotonic()
-    results = eng.generate(reqs)
-    dt = time.monotonic() - t0
+        # the engine resolves the active mesh: params go resident
+        # tensor-parallel, batches shard over the data axes
+        eng = ServeEngine(model, params, max_batch=8, max_len=args.max_len,
+                          temperature=args.temperature)
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8,
+                                        dtype=np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)
+        ]
+        t0 = time.monotonic()
+        results = eng.generate(reqs)
+        dt = time.monotonic() - t0
     toks = sum(len(r.tokens) for r in results)
     for r in results[:4]:
         print(f"req {r.uid}: {r.tokens.tolist()}")

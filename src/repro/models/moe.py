@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.api import current_ctx
+from repro.dist.compat import shard_map
 from repro.models.base import ArchConfig
 from repro.models.layers import Params, _dense_init, linear, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
 
@@ -134,7 +135,7 @@ def moe_apply(p: Params, h: jax.Array, cfg: ArchConfig, *,
                 x2s, g_loc, wi, wg, wo, cap, None, prefix)
             return jax.lax.psum(out, tpax)
 
-        out2 = jax.shard_map(
+        out2 = shard_map(
             body,
             mesh=ctx.mesh,
             in_specs=(P(ctx.dp_axes, None), P(ctx.dp_axes, None),

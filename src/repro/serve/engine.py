@@ -11,8 +11,12 @@ Design (CPU-testable, TPU-shaped):
   - optional 2:4-sparse weights (serve.sparse) — same code path, the
     sparse matmuls dispatch inside models.layers.linear.
 
-On a mesh, params are sharded by dist.sharding rules and the cache's
-batch dim over the data axes (see launch/serve.py + the decode dry-run).
+On a mesh — passed explicitly or resolved from the active ``repro.dist``
+context — params are sharded by dist.sharding rules (tensor-parallel
+resident, no FSDP: serving re-reads weights every step) and each
+bucket's token batch is placed over the data axes when it divides (see
+launch/serve.py + the decode dry-run).  Without a mesh everything stays
+single-device.
 """
 
 from __future__ import annotations
@@ -51,9 +55,28 @@ class ServeEngine:
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
         extra_batch: Optional[Dict[str, jax.Array]] = None,
+        mesh=None,
     ):
+        from repro.dist import current_ctx, dp_axes_of, shard_params
+
         self.model = model
-        self.params = params
+        if mesh is None:
+            ctx = current_ctx()
+            mesh = ctx.mesh if ctx is not None else None
+        self.mesh = mesh
+        self.dp_axes = dp_axes_of(mesh) if mesh is not None else ()
+        self._dp = 1
+        self._batch_sharding = None
+        if self.dp_axes:
+            from repro.dist import batch_sharding
+
+            for a in self.dp_axes:
+                self._dp *= mesh.shape[a]
+            self._batch_sharding = batch_sharding(mesh, self.dp_axes)
+        # resident serving: tensor-parallel only (fsdp_axes=()) — an FSDP
+        # all-gather per decode step would dominate the wire
+        self.params = (shard_params(params, mesh, fsdp_axes=())
+                       if mesh is not None else params)
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
@@ -61,6 +84,17 @@ class ServeEngine:
         self.extra_batch = extra_batch or {}
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def _place_batch(self, batch: Dict[str, jax.Array]
+                     ) -> Dict[str, jax.Array]:
+        """Shard a bucket's batch over the data axes when it divides."""
+        if self._batch_sharding is None:
+            return batch
+        b = next(iter(batch.values())).shape[0]
+        if b % self._dp:
+            return batch
+        return {k: jax.device_put(v, self._batch_sharding)
+                for k, v in batch.items()}
 
     # ------------------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
@@ -87,6 +121,7 @@ class ServeEngine:
         for k, v in self.extra_batch.items():
             batch[k] = v[:b] if v.shape[0] >= b else jnp.broadcast_to(
                 v[:1], (b, *v.shape[1:]))
+        batch = self._place_batch(batch)
         cache = self.model.init_cache(b, self.max_len)
         logits, cache = self._prefill(self.params, batch, cache)
 

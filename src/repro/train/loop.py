@@ -18,7 +18,10 @@ Production behaviors (all unit-tested):
     untouched) and counted — one bad host can't poison the run.
 
 The step function is pjit'd with explicit param/batch shardings from
-dist.sharding; XLA inserts the DP gradient psum + TP collectives.
+dist.sharding; XLA inserts the DP gradient psum + TP collectives.  The
+mesh comes from the constructor or, when omitted, from the active
+``repro.dist`` context (``use_mesh``) — with neither, everything runs
+single-device.
 """
 
 from __future__ import annotations
@@ -126,14 +129,24 @@ class Trainer:
         pipeline,
         cfg: TrainConfig,
         mesh=None,
-        fsdp_axes: Sequence[str] = (),
+        fsdp_axes: Optional[Sequence[str]] = None,
     ):
         self.model = model
         self.opt = opt
         self.pipeline = pipeline
         self.cfg = cfg
+        # None = unspecified (resolve from the context); an explicit ()
+        # disables FSDP even under use_mesh (tensor-parallel only)
+        if mesh is None:
+            from repro.dist import current_ctx
+
+            ctx = current_ctx()
+            if ctx is not None:
+                mesh = ctx.mesh
+                if fsdp_axes is None:
+                    fsdp_axes = ctx.dp_axes
         self.mesh = mesh
-        self.fsdp_axes = tuple(fsdp_axes)
+        self.fsdp_axes = tuple(fsdp_axes) if fsdp_axes is not None else ()
         self.store = CheckpointStore(cfg.out_dir, keep=cfg.keep_ckpts)
         self.metrics_path = os.path.join(cfg.out_dir, "metrics.jsonl")
         self.straggler_events = 0

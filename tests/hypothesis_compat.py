@@ -1,0 +1,38 @@
+"""Import hypothesis, or degrade gracefully when it is not installed.
+
+``from hypothesis_compat import given, settings, st`` behaves exactly
+like the real thing when hypothesis is available (the pinned CI env);
+otherwise ``@given`` replaces the test with a skip marker so the rest of
+the module's plain tests still collect and run.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            # keep the test's name for reporting, but NOT its signature
+            # (pytest would read wrapped params as fixture requests)
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

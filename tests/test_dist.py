@@ -80,6 +80,7 @@ def test_compressed_psum_close_to_exact():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.dist import shard_map
         from repro.optim.compression import compressed_psum
 
         mesh = jax.make_mesh((8,), ("pods",))
@@ -89,7 +90,7 @@ def test_compressed_psum_close_to_exact():
         def body(x):
             return compressed_psum(x[0], "pods")
 
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shard_map(
             body, mesh=mesh, in_specs=P("pods"), out_specs=P("pods"),
         ))(xs)
         got = np.asarray(out).reshape(8, -1)[0]
@@ -131,8 +132,8 @@ def test_sharded_train_step_matches_single_device():
     """pjit on a 2×4 mesh == single-device step (same seed, same batch)."""
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_smoke
+        from repro.dist import use_mesh
         from repro.dist.sharding import batch_sharding, param_shardings
         from repro.models import LM
         from repro.optim import AdamW
@@ -159,7 +160,7 @@ def test_sharded_train_step_matches_single_device():
             jax.device_put(opt_state.mu, psh),
             jax.device_put(opt_state.nu, psh))
         batch_d = {k: jax.device_put(v, bsh) for k, v in batch.items()}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             p_d, o_d, _, m_d = jax.jit(step)(
                 params_d, opt_d, jnp.zeros(()), batch_d)
         assert abs(float(m_ref["loss"]) - float(m_d["loss"])) < 1e-4

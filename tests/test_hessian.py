@@ -30,7 +30,9 @@ def test_uneven_chunks_equal():
     a.update(x)
     for lo, hi in [(0, 7), (7, 50), (50, 100)]:
         b.update(x[:, lo:hi])
-    np.testing.assert_allclose(np.asarray(a.h), np.asarray(b.h), rtol=1e-4)
+    # chunk boundaries reassociate the f32 sums — tolerance, not equality
+    np.testing.assert_allclose(np.asarray(a.h), np.asarray(b.h),
+                               rtol=1e-4, atol=1e-6)
 
 
 def test_merge_matches_concat():

@@ -1,9 +1,10 @@
-"""Property-based tests of system-level invariants (hypothesis)."""
+"""Property-based tests of system-level invariants (hypothesis;
+each test degrades to a skip when hypothesis is not installed)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from conftest import random_psd_hessian
 from repro.core import masks as masks_lib

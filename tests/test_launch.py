@@ -11,6 +11,7 @@ def test_lower_compile_smoke_cells():
         import jax, dataclasses
         import numpy as np
         from repro import configs as cfglib
+        from repro.dist import cost_analysis_dict, use_mesh
         from repro.launch.dryrun import build_lowerable, OptFlags
         from repro.utils.hlo import collective_bytes
 
@@ -21,10 +22,10 @@ def test_lower_compile_smoke_cells():
             fn, args, shardings, model = build_lowerable(
                 "qwen3_14b", shape, mesh, cfg_override=cfg,
                 opt=OptFlags.level(6))
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 compiled = jax.jit(
                     fn, in_shardings=shardings).lower(*args).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             assert float(cost.get("flops", 0)) > 0
             stats = collective_bytes(compiled.as_text(), trip_counts=(2,))
             print(shape, "ok", stats.total_count, "collectives")
