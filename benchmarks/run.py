@@ -16,7 +16,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 MODULES = ("table1", "table2", "table3", "ablation", "kernelbench",
-           "roofline")
+           "roofline", "calib_pipeline")
+# the CI smoke subset: cheap, but together they exercise the trained-model
+# cache, a full engine run (both pipeline modes) and the CSV plumbing
+SMOKE_MODULES = ("calib_pipeline",)
 
 
 def main() -> None:
@@ -25,9 +28,15 @@ def main() -> None:
                     help=f"comma-separated subset of {MODULES}")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sweeps (CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI smoke: --fast over {SMOKE_MODULES} "
+                         "(unless --only narrows further)")
     args = ap.parse_args()
 
-    chosen = args.only.split(",") if args.only else list(MODULES)
+    if args.smoke:
+        args.fast = True
+    default = list(SMOKE_MODULES) if args.smoke else list(MODULES)
+    chosen = args.only.split(",") if args.only else default
     results = []
     for name in chosen:
         if name not in MODULES:

@@ -1,8 +1,13 @@
-"""Row-parallel distributed pruning (Remark 4.2) — run with virtual
-devices to see the shard_map path produce bit-identical results:
+"""Distributed pruning (Remark 4.2 + multi-pod calibration) — run with
+virtual devices to see the sharded paths match single-device results:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/distributed_prune.py
+
+Demonstrates the three distributed pieces the PruningEngine composes:
+per-pod×data-shard calibration merged with one collective per linear
+(``allreduce_calibration``), the row-parallel layer solve, and the
+engine's pipelined scheduler driving both.
 """
 
 import os
@@ -18,13 +23,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import SparsitySpec, current_ctx, prune_matrix, use_mesh
-from repro.core.distributed import hessian_allreduce, prune_matrix_sharded
-from repro.core.hessian import HessianAccumulator
+from repro.core.calibration import CalibrationSet
+from repro.core.distributed import (
+    allreduce_calibration,
+    prune_matrix_sharded,
+)
 
 
 def main():
     print(f"devices: {jax.device_count()}")
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # 2 pods × 2 data shards × 2-way model parallel
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     n, m = 64, 128
     key = jax.random.key(0)
     w = jax.random.normal(key, (n, m)) * 0.1
@@ -34,23 +43,23 @@ def main():
         print(f"active context: dp={ctx.dp} over {ctx.dp_axes}, "
               f"tp={ctx.tp} over {ctx.tp_axis!r}")
 
-        # 1. data-parallel calibration: each data shard accumulates its
-        #    own Hessian over its calibration tokens, one psum merges
-        #    them.  The mesh resolves from the context — no mesh arg.
-        shards = []
-        for i in range(2):
-            acc = HessianAccumulator(m)
-            acc.update(jax.random.normal(jax.random.fold_in(key, i),
-                                         (m, 256 + 64 * i)))
-            shards.append(acc)
-        h = hessian_allreduce(
-            None, jnp.stack([a.h for a in shards]),
-            jnp.stack([a.count for a in shards]))
-        print(f"merged Hessian from {len(shards)} data shards")
+        # 1. multi-pod calibration: every pod×data slice accumulates its
+        #    own CalibrationSet over its calibration tokens; the merge is
+        #    one hessian_allreduce collective per linear (DCN-friendly —
+        #    this is what PruningEngine(calib_shard=...) does per segment)
+        sets = []
+        for s in range(ctx.dp):
+            x = jax.random.normal(jax.random.fold_in(key, s),
+                                  (4, 64 + 16 * s, m))
+            sets.append(CalibrationSet.from_captures({"wq": x}))
+        calib = allreduce_calibration(sets, None, axis_name=ctx.dp_axes)
+        h = calib.hessian("wq")
+        print(f"merged Hessian from {len(sets)} pod×data shards "
+              f"({int(calib.accs['wq'].count)} tokens)")
 
         # 2. row-parallel MRP prune over the `model` axis — zero
         #    collectives inside the layer (rows are independent,
-        #    Remark 4.2); again the context supplies the mesh.
+        #    Remark 4.2); the context supplies the mesh.
         t0 = time.monotonic()
         w_sh, mask_sh = prune_matrix_sharded(w, h, "2:4", method="SM",
                                              blocksize=64)

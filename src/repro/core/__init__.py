@@ -10,6 +10,7 @@ from repro.core.sparsity import SparsitySpec
 from repro.core.hessian import HessianAccumulator, dampened_inverse
 from repro.core.pruner import prune_matrix, PruneResult, METHODS
 from repro.core.engine import PruningEngine, LinearSpec
+from repro.core.pipeline import PipelineStats, SegmentScheduler, run_pipelined
 
 __all__ = [
     "SparsitySpec",
@@ -20,4 +21,7 @@ __all__ = [
     "METHODS",
     "PruningEngine",
     "LinearSpec",
+    "PipelineStats",
+    "SegmentScheduler",
+    "run_pipelined",
 ]

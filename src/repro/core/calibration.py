@@ -19,7 +19,7 @@ Leading dims are arbitrary (batch, experts, ...) and get flattened here.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,13 @@ class CalibrationSet:
             else:
                 acc.update_weighted(x2.T, w2)
 
+    @classmethod
+    def from_captures(cls, captures: Mapping[str, Capture]) -> "CalibrationSet":
+        """One-shot construction from a single (batched) capture dict."""
+        out = cls()
+        out.update(captures)
+        return out
+
     def merge(self, other: "CalibrationSet") -> "CalibrationSet":
         out = CalibrationSet()
         names = set(self.accs) | set(other.accs)
@@ -73,6 +80,24 @@ class CalibrationSet:
                 out.accs[name] = a
             else:
                 out.accs[name] = a.merge(b)
+        return out
+
+    @classmethod
+    def merge_all(cls, sets: "Sequence[CalibrationSet]") -> "CalibrationSet":
+        """Merge N per-shard sets on device (one fused op per linear).
+
+        Unlike folding :meth:`merge` pairwise this dispatches a single
+        stacked weighted mean per linear — the host never materializes
+        an intermediate Hessian (calibration sharding, core.pipeline).
+        """
+        sets = list(sets)
+        if len(sets) == 1:
+            return sets[0]
+        out = cls()
+        names = set().union(*(set(s.accs) for s in sets))
+        for name in sorted(names):
+            accs = [s.accs[name] for s in sets if name in s.accs]
+            out.accs[name] = HessianAccumulator.merge_many(accs)
         return out
 
     def hessian(self, name: str) -> jax.Array:

@@ -25,16 +25,20 @@ sites never thread a mesh by hand.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.calibration import CalibrationSet
+from repro.core.hessian import HessianAccumulator
 from repro.core.pruner import prune_matrix
 from repro.core.sparsity import SparsitySpec
 from repro.dist import current_ctx, shard_map
 from repro.dist.sharding import replicated, row_sharding
+
+Axes = Union[str, Sequence[str]]
 
 
 def _resolve_mesh(mesh: Optional[Mesh]) -> Mesh:
@@ -48,45 +52,118 @@ def _resolve_mesh(mesh: Optional[Mesh]) -> Mesh:
     return ctx.mesh
 
 
+def _as_axes(axis_name: Axes) -> Tuple[str, ...]:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
 # ----------------------------------------------------------------------
 # Hessian combination across data shards
 # ----------------------------------------------------------------------
 def psum_hessian(
-    h_local: jax.Array, count_local: jax.Array, axis_name: str = "data"
+    h_local: jax.Array, count_local: jax.Array, axis_name: Axes = "data"
 ) -> Tuple[jax.Array, jax.Array]:
     """Token-weighted mean of per-shard Hessians (call inside shard_map).
 
     Matches ``HessianAccumulator.merge``: H = Σ_s H_s·n_s / Σ_s n_s.
+    ``axis_name`` may be one axis or several (``("pod", "data")`` reduces
+    over DCN and within-pod batch shards in one collective).
     """
-    total = jax.lax.psum(count_local, axis_name)
-    h = jax.lax.psum(h_local * count_local, axis_name) / jnp.maximum(total, 1.0)
+    ax = axis_name if isinstance(axis_name, str) else tuple(axis_name)
+    total = jax.lax.psum(count_local, ax)
+    h = jax.lax.psum(h_local * count_local, ax) / jnp.maximum(total, 1.0)
     return h, total
 
 
 def hessian_allreduce(
     mesh: Optional[Mesh], h_shards: jax.Array, counts: jax.Array,
-    axis_name: str = "data"
+    axis_name: Axes = "data"
 ) -> jax.Array:
     """Host-level convenience: merge per-shard Hessians stacked on axis 0.
 
-    h_shards: (n_shards, m, m) placed along ``axis_name``; counts:
-    (n_shards,).  ``mesh=None`` resolves the active context's mesh.
+    h_shards: (n_shards, m, m) placed along ``axis_name`` (one axis or a
+    tuple like ``("pod", "data")`` — n_shards must equal the product of
+    the axis sizes); counts: (n_shards,).  ``mesh=None`` resolves the
+    active context's mesh.
     """
     mesh = _resolve_mesh(mesh)
-    ax = axis_name
+    return _allreduce_fn(mesh, _as_axes(axis_name))(h_shards, counts)
+
+
+@functools.lru_cache(maxsize=64)
+def _allreduce_fn(mesh: Mesh, axes: Tuple[str, ...]):
+    """Compiled Hessian-merge collective, cached per (mesh, axes) —
+    shard_map re-traces on every fresh closure, and the engine calls
+    this once per linear per segment."""
+    ax_entry = axes if len(axes) > 1 else axes[0]
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(ax), P(ax)),
+        in_specs=(P(ax_entry), P(ax_entry)),
         out_specs=P(),
     )
     def _merge(hs, cs):
         # each shard holds (1, m, m) / (1,)
-        h, _ = psum_hessian(hs[0], cs[0], ax)
+        h, _ = psum_hessian(hs[0], cs[0], ax_entry)
         return h
 
-    return _merge(h_shards, counts)
+    return jax.jit(_merge)
+
+
+def allreduce_calibration(
+    sets: Sequence[CalibrationSet],
+    mesh: Optional[Mesh] = None,
+    axis_name: Axes = "data",
+) -> CalibrationSet:
+    """Merge per-shard :class:`CalibrationSet`s over the mesh's batch axes.
+
+    Each entry of ``sets`` is one data(+pod) shard's accumulated
+    calibration state for the same segment; the merged Hessian per linear
+    comes from one :func:`hessian_allreduce` collective with the stacked
+    per-shard Hessians placed along ``axis_name`` — no host round-trips.
+    When the shard count does not match the axis sizes (e.g. calibration
+    was split more coarsely than the mesh), falls back to the on-device
+    tree merge ``CalibrationSet.merge_all``.
+    """
+    sets = list(sets)
+    if len(sets) == 1:
+        return sets[0]
+    mesh = _resolve_mesh(mesh)
+    axes = _as_axes(axis_name)
+    n_axes = 1
+    for a in axes:
+        n_axes *= mesh.shape[a]
+    if len(sets) != n_axes:
+        return CalibrationSet.merge_all(sets)
+
+    out = CalibrationSet()
+    names = set().union(*(set(s.accs) for s in sets))
+    stack_sh = row_sharding(mesh, axes, ndim=3)
+    count_sh = row_sharding(mesh, axes, ndim=1)
+    for name in sorted(names):
+        if any(name not in s.accs for s in sets):
+            # a linear some shard never saw (shouldn't happen for dense
+            # segments) — degrade to the tree merge for this name only
+            accs = [s.accs[name] for s in sets if name in s.accs]
+            out.accs[name] = HessianAccumulator.merge_many(accs)
+            continue
+        accs = [s.accs[name] for s in sets]
+        hs = jax.device_put(jnp.stack([a.h for a in accs]), stack_sh)
+        cs = jnp.stack([a.count for a in accs])
+        h = hessian_allreduce(mesh, hs, jax.device_put(cs, count_sh),
+                              axis_name=axes)
+        if _cpu_multidevice():
+            # XLA's CPU runtime deadlocks on concurrent independent
+            # collective programs (see core.pipeline.strict_collective_
+            # sync) — drain each linear's allreduce before the next
+            jax.block_until_ready(h)
+        out.accs[name] = HessianAccumulator(
+            accs[0].dim, h=h, count=jnp.sum(cs))
+    return out
+
+
+def _cpu_multidevice() -> bool:
+    return jax.default_backend() == "cpu" and jax.device_count() > 1
 
 
 # ----------------------------------------------------------------------
@@ -119,6 +196,30 @@ def prune_matrix_sharded(
     if n % n_shards:
         raise ValueError(f"rows {n} not divisible by {model_axis}={n_shards}")
 
+    fn = _sharded_prune_fn(
+        mesh, spec, method, blocksize, gamma, score, row_chunk, model_axis)
+    w_sh = jax.device_put(w, row_sharding(mesh, model_axis))
+    h_rep = jax.device_put(h, replicated(mesh))
+    return fn(w_sh, h_rep)
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_prune_fn(
+    mesh: Mesh,
+    spec: SparsitySpec,
+    method: str,
+    blocksize: int,
+    gamma: float,
+    score: Optional[str],
+    row_chunk: Optional[int],
+    model_axis: str,
+):
+    """Compiled row-parallel layer solve, cached per (mesh, prune
+    config); jit keys on the weight/Hessian shapes, so every linear of
+    the same shape across all segments shares one compilation (a fresh
+    shard_map closure per call re-traced the whole MRP block loop —
+    28 compiles per tiny-LM prune, the wall-clock dominator)."""
+
     def _local(w_loc, h_rep):
         res = prune_matrix(
             w_loc,
@@ -133,13 +234,10 @@ def prune_matrix_sharded(
         )
         return res.w, res.mask
 
-    fn = shard_map(
+    return jax.jit(shard_map(
         _local,
         mesh=mesh,
         in_specs=(P(model_axis, None), P(None, None)),
         out_specs=(P(model_axis, None), P(model_axis, None)),
         check_vma=False,
-    )
-    w_sh = jax.device_put(w, row_sharding(mesh, model_axis))
-    h_rep = jax.device_put(h, replicated(mesh))
-    return fn(w_sh, h_rep)
+    ))

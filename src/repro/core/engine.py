@@ -25,11 +25,19 @@ Distribution: pass ``mesh=`` or construct the engine inside
 ``repro.dist.use_mesh(mesh)`` and every divisible layer solve runs
 row-parallel over the mesh's ``model`` axis (core.distributed,
 Remark 4.2); without a mesh the engine is the paper's host-driven loop.
+
+Pipelining: by default (``pipeline="auto"``) the engine drives the
+batched/jitted/async scheduler in :mod:`repro.core.pipeline` — stacked
+calibration batches, per-data-shard Hessian accumulation merged with
+``hessian_allreduce`` (``calib_shard``), and capture/solve/propagate
+overlap via async dispatch.  ``pipeline="off"`` keeps the paper's serial
+per-batch loop (the semantic reference; identical results, tested).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -38,10 +46,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.calibration import CalibrationSet, Capture
-from repro.core.pruner import PruneResult, prune_matrix, reconstruction_error
+from repro.core.pruner import PruneResult, prune_matrix
 from repro.core.sparsity import SparsitySpec
 
 log = logging.getLogger("repro.engine")
+
+
+@functools.lru_cache(maxsize=256)
+def _local_solve_fn(spec, method, blocksize, gamma, score, row_chunk,
+                    row_balanced):
+    def f(w, h):
+        res = prune_matrix(
+            w, h, spec, method=method, blocksize=blocksize, gamma=gamma,
+            score=score, row_chunk=row_chunk, row_balanced=row_balanced)
+        return res.w, res.mask, res.loss
+    return jax.jit(f)
 
 
 @dataclasses.dataclass
@@ -76,6 +95,10 @@ class LinearReport:
     method: str
     sparsity: float
     recon_error: float
+    # serial mode: the solve's blocking wall-clock.  Pipelined mode: the
+    # host *dispatch* time only (solves execute async; per-linear device
+    # time is unobservable without stalling the queue — use
+    # engine.last_pipeline_stats for stage-level costs).
     seconds: float
     shape: Tuple[int, int]
 
@@ -96,6 +119,8 @@ class PruningEngine:
         skip: Sequence[str] = (),
         progress_store=None,
         mesh=None,
+        pipeline: str = "auto",
+        calib_shard="auto",
     ):
         self.model = model
         self.spec = SparsitySpec.parse(spec) if isinstance(spec, str) else spec
@@ -107,6 +132,13 @@ class PruningEngine:
         self.row_balanced = row_balanced
         self.skip = tuple(skip)
         self.progress_store = progress_store
+        if pipeline not in ("auto", "on", "off", True, False, None):
+            raise ValueError(
+                f"pipeline={pipeline!r} not in ('auto', 'on', 'off')")
+        self.pipeline = pipeline
+        self.calib_shard = calib_shard
+        self.last_pipeline_stats = None
+        self._solve_fn = None
         if mesh is None:
             from repro.dist import current_ctx
 
@@ -124,35 +156,76 @@ class PruningEngine:
             return 1
         return self.mesh.shape["model"]
 
-    def _prune_one(self, w: jax.Array, hmat: jax.Array) -> PruneResult:
+    def _local_solve(self) -> Callable:
+        """Jitted local layer solve (traceable specs only): returns
+        (w_pruned, mask, loss) with the loss left on device — the
+        pipelined path must not sync the host per linear.  Cached per
+        prune config (module level), so every engine in a process shares
+        one compilation per layer shape."""
+        if self._solve_fn is None:
+            self._solve_fn = _local_solve_fn(
+                self.spec, self.method, self.blocksize, self.gamma,
+                self.score, self.row_chunk, self.row_balanced)
+        return self._solve_fn
+
+    def _prune_one(self, w: jax.Array, hmat: jax.Array,
+                   sync: bool = True) -> PruneResult:
         """One layer solve — row-parallel over the mesh's ``model`` axis
         when active and the rows divide (Remark 4.2), else local.
 
         The sharded path selects masks per-row (its static-shape
         requirement), so unstructured specs only take it when the engine
         was configured ``row_balanced`` — a global-top-k request must not
-        silently change selection semantics under a mesh."""
+        silently change selection semantics under a mesh.
+
+        ``sync=False`` (the pipelined scheduler) keeps the result's loss
+        a device array and routes traceable local solves through one
+        cached jit, so nothing here blocks the async dispatch queue.
+        """
         tp = self._model_parallel()
-        if (tp > 1 and w.ndim == 2 and w.shape[0] % tp == 0
-                and (self.spec.is_semi_structured or self.row_balanced)):
+        traceable = self.spec.is_semi_structured or self.row_balanced
+        if (tp > 1 and w.ndim == 2 and w.shape[0] % tp == 0 and traceable):
             from repro.core.distributed import prune_matrix_sharded
+            from repro.core.pruner import reconstruction_error_traced
 
             w_new, mask = prune_matrix_sharded(
                 w, hmat, self.spec, self.mesh, method=self.method,
                 blocksize=self.blocksize, gamma=self.gamma,
                 score=self.score, row_chunk=self.row_chunk)
+            loss = reconstruction_error_traced(w, w_new, hmat)
             return PruneResult(
-                w_new, mask, reconstruction_error(w, w_new, hmat),
+                w_new, mask, float(loss) if sync else loss,
                 self.method, self.spec)
+        if not sync and traceable:
+            w_new, mask, loss = self._local_solve()(w, hmat)
+            return PruneResult(w_new, mask, loss, self.method, self.spec)
         return prune_matrix(
             w, hmat, self.spec, method=self.method,
             blocksize=self.blocksize, gamma=self.gamma, score=self.score,
             row_chunk=self.row_chunk, row_balanced=self.row_balanced)
 
+    def _pipeline_enabled(self) -> bool:
+        return self.pipeline not in ("off", False, None)
+
     def run(
         self, params: Any, calib_batches: Sequence[Any]
     ) -> Tuple[Any, List[LinearReport]]:
-        """Prune the whole model. ``calib_batches``: token batches."""
+        """Prune the whole model. ``calib_batches``: token batches.
+
+        Dispatches to the pipelined scheduler (core.pipeline) unless
+        ``pipeline="off"`` selected the serial reference loop.
+        """
+        if self._pipeline_enabled():
+            from repro.core.pipeline import run_pipelined
+
+            return run_pipelined(self, params, calib_batches)
+        return self._run_serial(params, calib_batches)
+
+    def _run_serial(
+        self, params: Any, calib_batches: Sequence[Any]
+    ) -> Tuple[Any, List[LinearReport]]:
+        """The paper's host-driven per-batch loop (``pipeline="off"``)."""
+        self.last_pipeline_stats = None
         segments = self.model.prunable_segments()
         reports: List[LinearReport] = []
 

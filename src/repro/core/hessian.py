@@ -68,6 +68,14 @@ def _accum_update_weighted(h: jax.Array, count: jax.Array, x: jax.Array,
     return h, new_count
 
 
+@jax.jit
+def _merge_many(hs: jax.Array, cs: jax.Array):
+    """Weighted mean of stacked (S, m, m) Hessians by (S,) token counts."""
+    total = jnp.sum(cs)
+    h = jnp.einsum("s,sij->ij", cs, hs) / jnp.maximum(total, 1.0)
+    return jnp.where(total > 0, h, hs[0]), total
+
+
 @dataclasses.dataclass
 class HessianAccumulator:
     """Streaming accumulator for the layer Hessian H = mean_t 2 x_t x_tᵀ.
@@ -122,6 +130,25 @@ class HessianAccumulator:
             self.h,
         )
         return HessianAccumulator(self.dim, h=h, count=total)
+
+    @staticmethod
+    def merge_many(accs: "list[HessianAccumulator]") -> "HessianAccumulator":
+        """Token-weighted mean of N accumulators in one fused device op.
+
+        Equivalent to folding :meth:`merge` pairwise, but a single
+        einsum over the stacked Hessians — no host round-trips, one
+        dispatch regardless of shard count (the calibration-sharding
+        merge path, core.pipeline).
+        """
+        if len(accs) == 1:
+            return accs[0]
+        dim = accs[0].dim
+        if any(a.dim != dim for a in accs):
+            raise ValueError(
+                f"cannot merge accumulators of dims {[a.dim for a in accs]}")
+        hs, cs = _merge_many(jnp.stack([a.h for a in accs]),
+                             jnp.stack([a.count for a in accs]))
+        return HessianAccumulator(dim, h=hs, count=cs)
 
     def finalize(self) -> jax.Array:
         return self.h

@@ -215,8 +215,10 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def row_sharding(mesh: Mesh, axis: str = "model",
-                 ndim: int = 2) -> NamedSharding:
-    """Dim 0 over ``axis``, the rest replicated — the layout of the
-    row-parallel layer solve (core.distributed, Remark 4.2)."""
-    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+def row_sharding(mesh: Mesh, axis="model", ndim: int = 2) -> NamedSharding:
+    """Dim 0 over ``axis`` (one mesh axis, or a tuple like
+    ``("pod", "data")``), the rest replicated — the layout of the
+    row-parallel layer solve (core.distributed, Remark 4.2) and of the
+    stacked per-shard Hessians entering ``hessian_allreduce``."""
+    entry = _entry(axis) if isinstance(axis, (tuple, list)) else axis
+    return NamedSharding(mesh, P(entry, *([None] * (ndim - 1))))

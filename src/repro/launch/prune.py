@@ -58,6 +58,14 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--calib-samples", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=64)
+    ap.add_argument("--pipeline", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="batched/async calibration-solve scheduler "
+                         "(core.pipeline); 'off' = the paper's serial loop")
+    ap.add_argument("--calib-shard", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="accumulate calibration Hessians per data(+pod) "
+                         "shard and merge with hessian_allreduce")
     ap.add_argument("--out", default="/tmp/repro_pruned")
     add_mesh_argument(ap)
     args = ap.parse_args()
@@ -77,12 +85,18 @@ def main() -> None:
         engine = PruningEngine(
             model, args.sparsity, method=args.method,
             blocksize=args.blocksize, gamma=args.gamma,
-            progress_store=PruneProgressStore(args.out))
+            progress_store=PruneProgressStore(args.out),
+            pipeline=args.pipeline, calib_shard=args.calib_shard)
         pruned, reports = engine.run(params, calib)
         s = summarize(reports)
         print(f"pruned {s['linears']} linears, mean sparsity "
               f"{s['mean_sparsity']:.3f}, total recon error "
               f"{s['total_recon_error']:.4f}")
+        ps = engine.last_pipeline_stats
+        if ps is not None:
+            print(f"pipeline: {ps.segments} segments, "
+                  f"{ps.calib_shards} calib shard(s), {ps.compiles} "
+                  f"jitted stage fn(s), wall {ps.wall_s:.2f}s")
         print(f"{args.method} {args.sparsity} ppl: "
               f"{eval_ppl(model, pruned, pipe):.4f}")
     save_pytree(os.path.join(args.out, "pruned_params"), pruned,

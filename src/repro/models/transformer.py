@@ -661,6 +661,10 @@ class LM:
                 state["h"] = run_blocks(seg_params, state["h"], caps, enc_out)
             return state, (caps or {})
 
+        # segments with equal trace keys run the identical computation on
+        # identically-structured params — core.pipeline compiles each key
+        # once and reuses it across e.g. all period instances
+        seg_apply.trace_key = (seg_type, tuple(kinds))
         return seg_apply
 
     def prunable_segments(self) -> List[SegmentSpec]:
