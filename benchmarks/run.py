@@ -16,10 +16,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 MODULES = ("table1", "table2", "table3", "ablation", "kernelbench",
-           "roofline", "calib_pipeline")
+           "roofline", "calib_pipeline", "serve_throughput")
 # the CI smoke subset: cheap, but together they exercise the trained-model
-# cache, a full engine run (both pipeline modes) and the CSV plumbing
-SMOKE_MODULES = ("calib_pipeline",)
+# cache, a full engine run (both pipeline modes), the continuous-batching
+# serve runtime (paged KV + scheduler) and the CSV plumbing
+SMOKE_MODULES = ("calib_pipeline", "serve_throughput")
 
 
 def main() -> None:

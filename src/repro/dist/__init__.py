@@ -37,7 +37,10 @@ from repro.dist.sharding import (
     FSDP_EXCLUDE_EMBED,
     batch_sharding,
     batch_spec,
+    decode_cache_block_specs,
+    moe_dispatch_specs,
     named_shardings,
+    paged_kv_block_specs,
     param_shardings,
     param_specs,
     replicated,
@@ -61,7 +64,10 @@ __all__ = [
     "FSDP_EXCLUDE_EMBED",
     "batch_sharding",
     "batch_spec",
+    "decode_cache_block_specs",
+    "moe_dispatch_specs",
     "named_shardings",
+    "paged_kv_block_specs",
     "param_shardings",
     "param_specs",
     "replicated",

@@ -86,10 +86,22 @@ def param_specs(
     fsdp_exclude: Sequence[str] = (),
     tp_axis: str = "model",
     serve_moe: bool = False,
+    head_dim: Optional[int] = None,
 ) -> Any:
     """PartitionSpec pytree for a param tree under the layout policy
     above.  ``fsdp_axes=()`` disables FSDP (tensor-parallel only —
-    the resident-weights serving configuration)."""
+    the resident-weights serving configuration).
+
+    ``head_dim``: when given, the attention projections (wq/wk/wv
+    column-parallel, attn/xattn wo row-parallel) only shard over
+    ``model`` if every shard holds WHOLE heads (dim/tp a multiple of
+    head_dim).  A shard boundary through a head makes rope/qk-norm/
+    softmax operate on split halves — semantically fine under GSPMD,
+    but the jax 0.4.x CPU partitioner mis-executes the attention
+    slice+concat chain (observed maxdiff ~1 on the smoke configs), so
+    serving passes cfg.hd and falls back to replicating those
+    projections.  Leave None for the pure shape-divisibility rule
+    (training)."""
     fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.axis_names)
     dp_size = _axes_size(mesh, fsdp_axes) if fsdp_axes else 1
     tp_axes = (tp_axis,) if tp_axis in mesh.axis_names else ()
@@ -126,10 +138,18 @@ def param_specs(
             put(0, tp_axes, tp)                       # vocab-parallel
             put(1, fsdp, dp_size)
         elif len(base) == 2 and key in _COL_PARALLEL:
-            put(1, tp_axes, tp)
+            whole_heads = (head_dim is None or key not in ("wq", "wk", "wv")
+                           or (base[1] // tp) % head_dim == 0)
+            if whole_heads:
+                put(1, tp_axes, tp)
             put(0, fsdp, dp_size)
         elif len(base) == 2 and key in _ROW_PARALLEL:
-            put(0, tp_axes, tp)
+            parent = name.split("/")[-2] if "/" in name else ""
+            whole_heads = (head_dim is None
+                           or parent not in ("attn", "xattn")
+                           or (base[0] // tp) % head_dim == 0)
+            if whole_heads:
+                put(0, tp_axes, tp)
             put(1, fsdp, dp_size)
         elif key in _REPLICATED or len(base) < 2:
             pass                                      # replicate
@@ -197,6 +217,132 @@ def batch_sharding(
 ) -> NamedSharding:
     """NamedSharding twin of :func:`batch_spec`."""
     return NamedSharding(mesh, batch_spec(mesh, dp_axes))
+
+
+# ----------------------------------------------------------------------
+# Decode-cache rules (LM.cache_specs / the paged serve pool)
+# ----------------------------------------------------------------------
+def decode_cache_block_specs(
+    kind: str,
+    dims: dict,
+    mesh: Mesh,
+    *,
+    extra_lead: int = 0,
+    dp_axes: Sequence[str] = ("data",),
+    tp_axis: str = "model",
+    seq_shard: bool = False,
+    prefer_seq: bool = False,
+):
+    """PartitionSpec dict for ONE decode-cache block of ``kind``.
+
+    The cache twin of :func:`param_specs` — every decode-cache
+    PartitionSpec in repro comes from here (``LM.cache_specs`` merely
+    assembles these per the model's block layout).  ``dims`` carries the
+    divisibility-relevant model dims: ``num_kv_heads``, ``hd``,
+    ``d_inner``, ``d_model``, ``mlstm_hd``.
+
+    Layout policy: batch over the data (+pod) axes, the per-kind 'width'
+    dim (KV heads / head_dim / d_inner) over the model axis when
+    divisible.  ``seq_shard=True`` (long-context, batch < #data-shards):
+    the KV cache's *sequence* dim shards over the data axes instead of
+    batch (ring-attention-style context parallelism for decode);
+    recurrent state caches replicate over data (they are O(d) small).
+    ``prefer_seq``: when KV heads don't divide the model axis, shard the
+    sequence dim over model instead of head_dim (§Perf — an S-sharded
+    cache keeps attention scores local and reduces only softmax
+    partials).  ``extra_lead`` prepends unsharded dims (the lax.scan
+    layer-stack dim).
+    """
+    tp = mesh.shape[tp_axis]
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if seq_shard:
+        seq_dpe, dpe = dpe, None
+    else:
+        seq_dpe = None
+    lead = [None] * extra_lead
+
+    def kv_spec():
+        # (B, S, KV, hd): KV heads when they divide TP; otherwise either
+        # head_dim (baseline) or — prefer_seq — the SEQUENCE dim over
+        # model (GSPMD all-gathers an hd-sharded cache for the score
+        # contraction; an S-sharded cache keeps scores local).
+        if dims["num_kv_heads"] % tp == 0:
+            sp = (dpe, seq_dpe, tp_axis, None)
+        elif prefer_seq and seq_dpe is None:
+            sp = (dpe, tp_axis, None, None)
+        elif dims["hd"] % tp == 0:
+            sp = (dpe, seq_dpe, None, tp_axis)
+        else:
+            sp = (dpe, seq_dpe, None, None)
+        return P(*lead, *sp)
+
+    if kind in ("attn", "attn_local"):
+        return {"k": kv_spec(), "v": kv_spec()}
+    if kind == "dec_attn":
+        return {"k": kv_spec(), "v": kv_spec(),
+                "xk": kv_spec(), "xv": kv_spec()}
+    if kind == "mamba":
+        di = tp_axis if dims["d_inner"] % tp == 0 else None
+        return {"conv": P(*lead, dpe, None, di),
+                "ssm": P(*lead, dpe, di, None)}
+    if kind == "mlstm":
+        hsp = tp_axis if dims["mlstm_hd"] % tp == 0 else None
+        return {"c": P(*lead, dpe, None, hsp, None),
+                "n": P(*lead, dpe, None, hsp),
+                "m": P(*lead, dpe, None)}
+    if kind == "slstm":
+        dsp = tp_axis if dims["d_model"] % tp == 0 else None
+        return {k: P(*lead, dpe, dsp) for k in "cnhm"}
+    raise ValueError(kind)
+
+
+def paged_kv_block_specs(
+    dims: dict,
+    mesh: Mesh,
+    *,
+    extra_lead: int = 0,
+    tp_axis: str = "model",
+):
+    """PartitionSpec dict for one paged KV-pool block (serve.kvpool).
+
+    Pool leaves are (num_pages, page_size, KV, hd).  The page pool is a
+    single global address space indexed by per-request block tables, so
+    the page dims never shard (replicated over the data axes — any
+    device can serve any request); KV heads shard over the model axis
+    when they divide it, keeping the pool's layout aligned with the
+    head-parallel resident weights.  Unlike the dense decode cache there
+    is NO head_dim fallback: an hd-sharded pool would split the decode
+    score contraction across the model axis — an all-reduce inside every
+    paged-attention call, and a different f32 reduction order that
+    breaks the paged path's greedy bit-parity with the dense one
+    (docs/serving.md).
+    """
+    tp = mesh.shape[tp_axis] if tp_axis in mesh.axis_names else 1
+    lead = [None] * extra_lead
+    if tp > 1 and dims["num_kv_heads"] % tp == 0:
+        sp = (None, None, tp_axis, None)
+    else:
+        sp = (None, None, None, None)
+    spec = P(*lead, *sp)
+    return {"k": spec, "v": spec}
+
+
+# ----------------------------------------------------------------------
+# MoE expert-dispatch rules (models/moe.py shard_map)
+# ----------------------------------------------------------------------
+def moe_dispatch_specs(ctx) -> Tuple[tuple, P]:
+    """shard_map specs for the expert-parallel MoE dispatch.
+
+    Built from a :class:`repro.dist.api.DistContext`: token-major
+    operands shard dim 0 over the context's batch axes; the three
+    (E, ·, ·) expert weight stacks shard experts over its
+    tensor-parallel axis.  Returns ``(in_specs, out_specs)`` for
+    ``(tokens, gates, wi, wg, wo) -> out``.
+    """
+    tok = P(_entry(ctx.dp_axes), None)
+    exp = P(ctx.tp_axis, None, None)
+    return (tok, tok, exp, exp, exp), tok
 
 
 # ----------------------------------------------------------------------

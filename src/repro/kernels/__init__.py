@@ -4,6 +4,7 @@
   hessian_accum  streaming H = 2·x·xᵀ over calibration tokens (pruning)
   nm_select      Eq. (12) per-group combination scoring → 𝔐 mask (pruning)
   flash_attn     online-softmax causal attention (32k prefill)
+  paged_attn     block-table paged GQA decode attention (serve runtime)
 
 Each kernel has a pure-jnp oracle in ref.py and a jit'd public wrapper in
 ops.py.  On this CPU container they are validated with interpret=True;

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attn as _flash
+from repro.kernels.paged_attn import paged_attn as _paged_attn
 from repro.kernels.hessian_accum import hessian_accum as _hessian
 from repro.kernels.nm_select import nm_select as _nm_select
 from repro.kernels.nm_spmm import nm_spmm as _nm_spmm
@@ -86,6 +87,33 @@ def nm_select_mask(w: jax.Array, hinv: jax.Array,
         hgp = hgp.at[g:].set(eye)
     mask = _nm_select(wp, hgp, br=brr, bg=bg, interpret=INTERPRET)
     return mask[:r, :c].astype(bool)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array,
+                    window: Optional[int] = None,
+                    use_kernel: Optional[bool] = None) -> jax.Array:
+    """Paged GQA decode attention over block-table pages.
+
+    q: (B, KV, G, hd); k/v_pages: (P, page_size, KV, hd); block_tables:
+    (B, P_max) int32; lengths: (B,). Returns (B, KV, G, hd) in v.dtype.
+
+    Dispatch: the Pallas kernel on TPU (block-table scalar prefetch, no
+    gather materialization); the jnp oracle otherwise — unlike the other
+    wrappers this does NOT default to interpret mode on CPU, because it
+    sits inside the jitted serve decode step and interpret execution
+    would dominate the step; ref.paged_attn_ref is the same math and is
+    bit-identical to the dense-cache decode path (use_kernel=True forces
+    the kernel, under interpret off-TPU — the parity tests).
+    """
+    if use_kernel is None:
+        use_kernel = not INTERPRET
+    if not use_kernel:
+        return ref.paged_attn_ref(q, k_pages, v_pages, block_tables,
+                                  lengths, window=window)
+    out = _paged_attn(q, k_pages, v_pages, block_tables, lengths,
+                      window=window, interpret=INTERPRET)
+    return out.astype(v_pages.dtype)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,

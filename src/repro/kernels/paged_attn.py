@@ -1,0 +1,127 @@
+"""Paged-attention decode — Pallas TPU kernel over block-table pages.
+
+Continuous-batching decode (serve.engine) keeps each request's KV cache
+in fixed-size pages scattered across a global pool; a per-request block
+table maps logical KV positions to physical pages.  This kernel computes
+one decode step of grouped (GQA) attention directly over the paged pool:
+the block table rides in as a *scalar-prefetch* operand so each grid
+step's K/V page DMA is issued from ``block_tables[b, p]`` — the gather
+never materializes a per-request contiguous cache (the jnp oracle in
+ref.paged_attn_ref does exactly that, and is the CPU serving path).
+
+Grid (B, KV, P_max); the page axis is the innermost *sequential* axis —
+accumulator + running max/sum live in VMEM scratch across page steps
+(same online-softmax structure as flash_attn.py).  Pages past a
+request's length are skipped via @pl.when (their DMA still issues but
+runs no FLOPs; the mosaic pipeliner overlaps it with live compute), and
+an idle slot (length 0) computes nothing and emits zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *, page_size: int,
+                       window: Optional[int], scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # a page is live when it overlaps the valid key range
+    # [max(0, length-window), length) — every live page has >= 1 unmasked
+    # key, so the -1e30 mask never produces an all-masked softmax row
+    live = p * page_size < length
+    if window is not None:
+        live &= (p + 1) * page_size > length - window
+
+    @pl.when(live)
+    def _compute():
+        g = q_ref.shape[2]
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)            # (ps, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, ps)
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        ok = kpos < length
+        if window is not None:
+            ok &= kpos >= length - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]                               # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pmat = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(pmat, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            pmat, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attn(
+    q: jax.Array,                # (B, KV, G, hd)
+    k_pages: jax.Array,          # (P, page_size, KV, hd)
+    v_pages: jax.Array,          # (P, page_size, KV, hd)
+    block_tables: jax.Array,     # (B, P_max) int32 — physical page ids
+    lengths: jax.Array,          # (B,) int32 — valid KV entries per request
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """One paged GQA decode step. Returns (B, KV, G, hd) f32."""
+    b, kvh, g, hd = q.shape
+    _, page_size, _, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, kk, pp, bt, ln: (bb, kk, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bb, kk, pp, bt, ln: (bb, kk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((g, 1), jnp.float32),    # running max m
+            pltpu.VMEM((g, 1), jnp.float32),    # running sum l
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page_size=page_size,
+                          window=window, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

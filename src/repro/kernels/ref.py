@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
@@ -100,6 +101,42 @@ def nm_select_ref(w: jax.Array, hinv: jax.Array) -> jax.Array:
         combo_mask[ci, p] = combo_mask[ci, q] = True
     mask = jnp.asarray(combo_mask)[best]                     # (r,g,4)
     return mask.reshape(r, c)
+
+
+# ----------------------------------------------------------------------
+def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                   block_tables: jax.Array, lengths: jax.Array,
+                   window=None) -> jax.Array:
+    """Paged GQA decode oracle (and the CPU serving path — jittable).
+
+    q: (B, KV, G, hd); k/v_pages: (P, page_size, KV, hd); block_tables:
+    (B, P_max) int32 physical page ids; lengths: (B,) valid KV entries.
+    Gathers each request's pages contiguous, then runs exactly the
+    einsum/softmax sequence of models.layers._sdpa so paged greedy
+    decode is bit-identical to the dense cache path.  Returns
+    (B, KV, G, hd) in v.dtype (idle rows, length 0, are garbage — the
+    caller masks them).
+    """
+    b, kvh, g, hd = q.shape
+    _, page_size, _, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    s_len = p_max * page_size
+    k = k_pages[block_tables].reshape(b, s_len, kvh, hd)
+    v = v_pages[block_tables].reshape(b, s_len, kvh, hd)
+    # the einsum strings (incl. the T=1 dim) mirror layers._sdpa exactly
+    # — any other contraction layout lowers to a different f32 reduction
+    # order and breaks decode bit-parity with the dense cache
+    qg = q[:, None]                                   # (B, 1, KV, G, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    kpos = jnp.arange(s_len, dtype=jnp.int32)[None, :]
+    ok = kpos < lengths[:, None]
+    if window is not None:
+        ok &= kpos >= lengths[:, None] - window
+    scores = jnp.where(ok[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out[:, 0]                                  # (B, KV, G, hd)
 
 
 # ----------------------------------------------------------------------

@@ -1,7 +1,12 @@
-"""Serving driver: batched decode off a (optionally 2:4-pruned) checkpoint.
+"""Serving driver: continuous-batching decode off a (optionally
+2:4-pruned) checkpoint.
 
   python -m repro.launch.serve --arch paper-tiny-lm \\
       --params /tmp/pruned/pruned_params --sparse --requests 8
+
+``--serve-mode static`` selects the legacy bucketed path; the default
+continuous runtime takes ``--page-size`` / ``--num-pages`` for the paged
+KV pool (docs/serving.md).
 """
 
 from __future__ import annotations
@@ -32,6 +37,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--serve-mode", default="continuous",
+                    choices=("continuous", "static"),
+                    help="continuous batching (paged KV) or the legacy "
+                         "static bucketed path")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (continuous mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: dense-cache "
+                         "capacity equivalent)")
     add_mesh_argument(ap)
     args = ap.parse_args()
 
@@ -52,9 +66,15 @@ def main() -> None:
             print("packed 2:4-sparse weights (nm_spmm path)")
 
         # the engine resolves the active mesh: params go resident
-        # tensor-parallel, batches shard over the data axes
+        # tensor-parallel, the paged pool / bucket batches shard by the
+        # dist rules
         eng = ServeEngine(model, params, max_batch=8, max_len=args.max_len,
-                          temperature=args.temperature)
+                          temperature=args.temperature,
+                          mode=args.serve_mode, page_size=args.page_size,
+                          num_pages=args.num_pages)
+        if eng.mode != args.serve_mode:
+            print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
+                  f"fell back to {eng.mode}")
         rng = np.random.default_rng(0)
         reqs = [
             Request(uid=i,
@@ -69,7 +89,11 @@ def main() -> None:
     toks = sum(len(r.tokens) for r in results)
     for r in results[:4]:
         print(f"req {r.uid}: {r.tokens.tolist()}")
-    print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s)")
+    util = float(np.mean([r.utilization for r in results]))
+    preempts = sum(r.preemptions for r in results)
+    print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
+          f"[{eng.mode}] slot-utilization {util:.0%}"
+          + (f" preemptions {preempts}" if preempts else ""))
 
 
 if __name__ == "__main__":

@@ -313,6 +313,32 @@ def causal_mask(t, s, window: Optional[int] = None, offset: int = 0,
     return ok[None, None, None]  # (1,1,1,T,S)
 
 
+def _paged_write(pages: jax.Array, vals: jax.Array,
+                 flat_idx: jax.Array) -> jax.Array:
+    """Scatter K/V rows into a paged pool.
+
+    pages: (P, page_size, KV, hd); vals: (..., KV, hd) with leading dims
+    matching flat_idx: (...,) flat token slots (page*page_size+offset).
+    Duplicate indices (everything clamped to the scrap page 0) are
+    garbage-on-garbage — never read back because attention masks by
+    length.
+    """
+    p_, ps_, kvh, hd = pages.shape
+    flat = pages.reshape(p_ * ps_, kvh, hd)
+    flat = flat.at[flat_idx.reshape(-1)].set(
+        vals.reshape(-1, kvh, hd).astype(pages.dtype))
+    return flat.reshape(p_, ps_, kvh, hd)
+
+
+def attn_paged_cache_init(cfg: ArchConfig, num_pages: int, page_size: int,
+                          dtype) -> Params:
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((num_pages, page_size, kv, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, kv, hd), dtype),
+    }
+
+
 def attn_apply(
     p: Params,
     h: jax.Array,
@@ -326,6 +352,8 @@ def attn_apply(
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
     causal: bool = True,
     prefix_len: Optional[int] = None,
+    paged: Optional[Params] = None,
+    page_size: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Pre-norm attention with residual. Returns (h_out, new_cache).
 
@@ -337,6 +365,14 @@ def attn_apply(
                      attends over positions <= pos;
       cross         (cross_kv given): encoder-decoder cross attention —
                      no cache update, no rope, full visibility.
+
+    Paged modes (``paged`` given — the continuous-batching serve runtime,
+    docs/serving.md): ``cache`` holds (num_pages, page_size, KV, hd)
+    pool leaves; ``paged["block_tables"]`` (B, P_max) maps each
+    request's logical positions to physical pages.  Prefill additionally
+    takes ``paged["lengths"]`` (padded prompt tails write to the scrap
+    page 0); decode takes per-request ``pos`` (B,), -1 marking idle
+    slots.
     """
     window = cfg.window if kind == "attn_local" else None
     b, t, _ = h.shape
@@ -378,6 +414,20 @@ def attn_apply(
         y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
         if cache is None:
             return h + y, None
+        if paged is not None:
+            # paged prefill: scatter the prompt's K/V into this request's
+            # pages; padded tail positions (>= lengths) go to scrap page 0
+            lengths = paged["lengths"]                       # (B,)
+            bt = paged["block_tables"]                       # (B, P_max)
+            tpos = jnp.arange(t, dtype=jnp.int32)
+            page = jnp.take_along_axis(
+                bt, tpos[None, :] // page_size, axis=1)      # (B, T)
+            flat = page * page_size + tpos[None, :] % page_size
+            flat = jnp.where(tpos[None, :] < lengths[:, None], flat, 0)
+            new_cache = dict(cache)
+            new_cache["k"] = _paged_write(cache["k"], k, flat)
+            new_cache["v"] = _paged_write(cache["v"], v, flat)
+            return h + y, new_cache
         # prefill: write the prompt's K/V into cache[0:t]
         new_cache = dict(cache)
         new_cache["k"] = jax.lax.dynamic_update_slice(
@@ -387,6 +437,32 @@ def attn_apply(
         return h + y, new_cache
 
     # decode: t == 1
+    if paged is not None:
+        # paged decode: per-request write position (pos (B,), -1 = idle
+        # slot); block-table attention over the page pool
+        from repro.kernels import ops as _kops
+
+        bt = paged["block_tables"]                           # (B, P_max)
+        wpos = jnp.maximum(pos, 0)
+        positions = wpos[:, None]
+        q, k1, v1 = _qkv(p, h_in, cfg, positions, caps, prefix)
+        page = jnp.take_along_axis(
+            bt, (wpos // page_size)[:, None], axis=1)[:, 0]  # (B,)
+        flat = page * page_size + wpos % page_size
+        flat = jnp.where(pos >= 0, flat, 0)                  # idle → scrap
+        k_pages = _paged_write(cache["k"], k1[:, 0], flat)
+        v_pages = _paged_write(cache["v"], v1[:, 0], flat)
+        lengths = jnp.maximum(pos + 1, 0)                    # idle → 0
+        qg = q[:, 0].reshape(b, kv, nh // kv, hd)
+        out = _kops.paged_attention(qg, k_pages, v_pages, bt, lengths,
+                                    window=window)
+        out = out.reshape(b, 1, nh * hd)
+        y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
+        new_cache = dict(cache)
+        new_cache["k"] = k_pages
+        new_cache["v"] = v_pages
+        return h + y, new_cache
+
     positions = jnp.full((b, t), pos, dtype=jnp.int32)
     q, k1, v1 = _qkv(p, h_in, cfg, positions, caps, prefix)
     k_cache = jax.lax.dynamic_update_slice(

@@ -22,10 +22,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.dist.api import current_ctx
 from repro.dist.compat import shard_map
+from repro.dist.sharding import moe_dispatch_specs
 from repro.models.base import ArchConfig
 from repro.models.layers import Params, _dense_init, linear, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
 
@@ -121,7 +121,6 @@ def moe_apply(p: Params, h: jax.Array, cfg: ArchConfig, *,
                      and mc.num_experts % ctx.tp == 0)
     if use_shard_map:
         tp, tpax = ctx.tp, ctx.tp_axis
-        dp_spec = P(ctx.dp_axes)  # tokens sharded over data axes, dim 0
         n_loc = n // ctx.dp
         cap = max(1, int(math.ceil(n_loc * mc.top_k / mc.num_experts
                                    * mc.capacity_factor)))
@@ -135,13 +134,14 @@ def moe_apply(p: Params, h: jax.Array, cfg: ArchConfig, *,
                 x2s, g_loc, wi, wg, wo, cap, None, prefix)
             return jax.lax.psum(out, tpax)
 
+        # specs come from the dist rules layer, built off the context —
+        # no ad-hoc PartitionSpec construction here (docs/dist_api.md)
+        in_specs, out_specs = moe_dispatch_specs(ctx)
         out2 = shard_map(
             body,
             mesh=ctx.mesh,
-            in_specs=(P(ctx.dp_axes, None), P(ctx.dp_axes, None),
-                      P(tpax, None, None), P(tpax, None, None),
-                      P(tpax, None, None)),
-            out_specs=P(ctx.dp_axes, None),
+            in_specs=in_specs,
+            out_specs=out_specs,
             check_vma=False,
         )(x2, gates, p["wi"], p["wg"], p["wo"])
     else:

@@ -18,6 +18,8 @@ Entry points:
   init_cache(batch, max_len)            decode cache pytree
   prefill(params, batch, cache)         prompt → logits, filled cache
   decode_step(params, token, cache, pos)   one-token serve_step
+  init_paged_cache / prefill_paged /    paged-KV twin of the decode path
+    decode_step(..., paged=...)           (continuous batching, serve/)
   prunable_segments() / first_hidden()  core.engine contract
 """
 
@@ -41,6 +43,7 @@ from repro.models.layers import (
     attn_apply,
     attn_cache_init,
     attn_init,
+    attn_paged_cache_init,
     embed_apply,
     embed_init,
     frontend_apply,
@@ -98,15 +101,20 @@ def block_apply(
     enc_out: Optional[jax.Array] = None,
     prefix_len: Optional[int] = None,
     name_prefix: str = "",
+    paged: Optional[Params] = None,
+    page_size: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Apply one block (mixer + optional FFN). Returns (h, cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     np_ = name_prefix
+    if paged is not None and kind not in ("attn", "attn_local"):
+        raise ValueError(f"paged decode supports attention mixers only, "
+                         f"got {kind!r}")
     if kind in ("attn", "attn_local", "enc_attn"):
         h, cache = attn_apply(
             p["attn"], h, cfg, kind=kind, caps=caps, cache=cache, pos=pos,
             prefix=f"{np_}attn.", causal=(kind != "enc_attn"),
-            prefix_len=prefix_len)
+            prefix_len=prefix_len, paged=paged, page_size=page_size)
     elif kind == "dec_attn":
         h, cache = attn_apply(
             p["attn"], h, cfg, caps=caps, cache=cache, pos=pos,
@@ -386,67 +394,53 @@ class LM:
         return jax.eval_shape(
             functools.partial(self.init_cache, batch, max_len, dtype))
 
-    def cache_specs(self, mesh, dp_axes=("data",), tp_axis: str = "model",
-                    seq_shard: bool = False, prefer_seq: bool = False):
-        """PartitionSpec pytree for the decode cache: batch over the data
-        (+pod) axes, the per-kind 'width' dim (KV heads / head_dim /
-        d_inner) over the model axis when divisible.
-
-        ``seq_shard=True`` (long-context, batch < #data-shards): the KV
-        cache's *sequence* dim shards over the data axes instead of batch
-        (ring-attention-style context parallelism for decode); recurrent
-        state caches replicate over data (they are O(d) small)."""
-        from jax.sharding import PartitionSpec as P
-
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=None) -> Params:
+        """Paged KV pool for the continuous-batching serve runtime: the
+        same tree layout as :meth:`init_cache` but each attention leaf is
+        a global (num_pages, page_size, KV, hd) page pool shared by all
+        requests via per-request block tables (serve.kvpool owns the
+        allocator; page 0 is the scrap page).  Only attention mixers
+        page; recurrent-state archs keep dense per-slot caches."""
         cfg = self.cfg
-        tp = dict(zip(mesh.axis_names, mesh.devices.shape))[tp_axis]
-        dp = tuple(a for a in dp_axes if a in mesh.axis_names)
-        dpe = dp if len(dp) > 1 else (dp[0] if dp else None)
-        if seq_shard:
-            seq_dpe, dpe = dpe, None
-        else:
-            seq_dpe = None
+        dt = dtype or self.dtype
+        bad = [k for k in (*cfg.prefix, *cfg.period)
+               if k not in ("attn", "attn_local")]
+        if bad or cfg.encdec or cfg.frontend is not None:
+            # frontends excluded too: the paged decode branch carries no
+            # prefix_len, so a bidirectional image prefix would be
+            # silently masked out of windowed layers
+            raise ValueError(
+                f"{cfg.name}: paged decode supports plain attention "
+                f"decoders only (got {bad or ['encdec/frontend']})")
+        cache: Params = {}
+        if cfg.prefix:
+            cache["prefix"] = {
+                str(i): attn_paged_cache_init(cfg, num_pages, page_size, dt)
+                for i in range(len(cfg.prefix))
+            }
+        if cfg.n_periods:
+            cache["layers"] = {
+                f"s{j}": jax.vmap(
+                    lambda _: attn_paged_cache_init(
+                        cfg, num_pages, page_size, dt)
+                )(jnp.arange(cfg.n_periods))
+                for j in range(len(cfg.period))
+            }
+        return cache
 
-        def kv_spec(extra_lead: int):
-            # (B, S, KV, hd): KV heads when they divide TP; otherwise
-            # either head_dim (baseline) or — §Perf ``prefer_seq`` — the
-            # SEQUENCE dim over model (GSPMD all-gathers an hd-sharded
-            # cache for the score contraction; an S-sharded cache keeps
-            # scores local and reduces only softmax partials).
-            if cfg.num_kv_heads % tp == 0:
-                sp = (dpe, seq_dpe, tp_axis, None)
-            elif prefer_seq and seq_dpe is None:
-                sp = (dpe, tp_axis, None, None)
-            elif cfg.hd % tp == 0:
-                sp = (dpe, seq_dpe, None, tp_axis)
-            else:
-                sp = (dpe, seq_dpe, None, None)
-            return P(*([None] * extra_lead), *sp)
+    def _cache_dims(self) -> Dict[str, int]:
+        """The divisibility-relevant dims the dist cache rules consume."""
+        cfg = self.cfg
+        di = cfg.mlstm_proj * cfg.d_model
+        return {"num_kv_heads": cfg.num_kv_heads, "hd": cfg.hd,
+                "d_inner": cfg.d_inner, "d_model": cfg.d_model,
+                "mlstm_hd": di // cfg.num_heads}
 
-        def block_specs(kind: str, extra_lead: int):
-            lead = [None] * extra_lead
-            di_ok = cfg.d_inner % tp == 0
-            if kind in ("attn", "attn_local"):
-                return {"k": kv_spec(extra_lead), "v": kv_spec(extra_lead)}
-            if kind == "dec_attn":
-                return {"k": kv_spec(extra_lead), "v": kv_spec(extra_lead),
-                        "xk": kv_spec(extra_lead), "xv": kv_spec(extra_lead)}
-            if kind == "mamba":
-                di = tp_axis if di_ok else None
-                return {"conv": P(*lead, dpe, None, di),
-                        "ssm": P(*lead, dpe, di, None)}
-            if kind == "mlstm":
-                di = cfg.mlstm_proj * cfg.d_model
-                hd = di // cfg.num_heads
-                hsp = tp_axis if hd % tp == 0 else None
-                return {"c": P(*lead, dpe, None, hsp, None),
-                        "n": P(*lead, dpe, None, hsp),
-                        "m": P(*lead, dpe, None)}
-            if kind == "slstm":
-                dsp = tp_axis if cfg.d_model % tp == 0 else None
-                return {k: P(*lead, dpe, dsp) for k in "cnhm"}
-            raise ValueError(kind)
-
+    def _assemble_cache_specs(self, block_specs) -> Dict[str, Any]:
+        """Lay per-block spec dicts out in the model's prefix/period tree
+        (stacked period layers get one leading unsharded scan dim)."""
+        cfg = self.cfg
         specs: Dict[str, Any] = {}
         if cfg.prefix:
             specs["prefix"] = {
@@ -457,6 +451,39 @@ class LM:
                 f"s{j}": block_specs(kind, 1)
                 for j, kind in enumerate(cfg.period)}
         return specs
+
+    def cache_specs(self, mesh, dp_axes=("data",), tp_axis: str = "model",
+                    seq_shard: bool = False, prefer_seq: bool = False):
+        """PartitionSpec pytree for the decode cache.
+
+        The per-kind layout rules (batch over the data (+pod) axes, the
+        'width' dim — KV heads / head_dim / d_inner — over the model
+        axis when divisible, ``seq_shard``/``prefer_seq`` sequence
+        sharding) live in :func:`repro.dist.sharding
+        .decode_cache_block_specs`; this method only assembles them per
+        the model's block layout."""
+        from repro.dist.sharding import decode_cache_block_specs
+
+        dims = self._cache_dims()
+        return self._assemble_cache_specs(
+            lambda kind, lead: decode_cache_block_specs(
+                kind, dims, mesh, extra_lead=lead, dp_axes=dp_axes,
+                tp_axis=tp_axis, seq_shard=seq_shard,
+                prefer_seq=prefer_seq))
+
+    def paged_cache_specs(self, mesh, tp_axis: str = "model"):
+        """PartitionSpec pytree for the paged KV pool
+        (:meth:`init_paged_cache`): pages replicated over the data axes,
+        KV heads over the model axis when they divide it — deliberately
+        NO head_dim fallback (it would break paged/dense decode
+        bit-parity); the rules live in
+        :func:`repro.dist.sharding.paged_kv_block_specs`."""
+        from repro.dist.sharding import paged_kv_block_specs
+
+        dims = self._cache_dims()
+        return self._assemble_cache_specs(
+            lambda kind, lead: paged_kv_block_specs(
+                dims, mesh, extra_lead=lead, tp_axis=tp_axis))
 
     def prefill(self, params: Params, batch, cache: Params
                 ) -> Tuple[jax.Array, Params]:
@@ -512,13 +539,21 @@ class LM:
             outs.append(new_c)
         return h, tree_stack(outs)
 
-    def decode_step(self, params: Params, token: jax.Array, cache: Params,
-                    pos) -> Tuple[jax.Array, Params]:
-        """One-token decode. token: (B,) int32; pos: scalar int32 (the
-        absolute position being written). Returns (logits (B,V), cache)."""
+    def prefill_paged(self, params: Params, batch, cache: Params, *,
+                      lengths, block_tables, page_size: int
+                      ) -> Tuple[jax.Array, Params]:
+        """Prompt prefill into paged KV pages (continuous batching).
+
+        batch["tokens"]: (B, T_pad) prompts right-padded to a page
+        multiple; lengths: (B,) actual prompt lengths (padded positions
+        write to the scrap page, so pages only back real tokens);
+        block_tables: (B, P_max) physical page ids.  Returns (per-request
+        logits at position lengths-1, (B, V) f32, updated pool)."""
         cfg = self.cfg
-        h = embed_apply(params["embed"], token[:, None], cfg)
-        pl = self._prefix_len(None)
+        assert not cfg.encdec and cfg.frontend is None, \
+            "paged prefill: plain decoder-only archs"
+        h = self.first_hidden(params, batch)
+        paged = {"block_tables": block_tables, "lengths": lengths}
         cache = dict(cache)
 
         if cfg.prefix:
@@ -526,7 +561,8 @@ class LM:
             for i, kind in enumerate(cfg.prefix):
                 h, c, _ = block_apply(
                     cfg, kind, params["prefix"][str(i)], h,
-                    cache=cache["prefix"][str(i)], pos=pos, prefix_len=pl)
+                    cache=cache["prefix"][str(i)], paged=paged,
+                    page_size=page_size)
                 newp[str(i)] = c
             cache["prefix"] = newp
 
@@ -537,7 +573,54 @@ class LM:
                 for j, kind in enumerate(cfg.period):
                     h, c, _ = block_apply(
                         cfg, kind, pj[f"s{j}"], h, cache=cj[f"s{j}"],
-                        pos=pos, prefix_len=pl)
+                        paged=paged, page_size=page_size)
+                    new_c[f"s{j}"] = c
+                return h, new_c
+            h, new_layers = self._scan_or_unroll(
+                body, h, params["layers"], cache["layers"])
+            cache["layers"] = new_layers
+
+        idx = jnp.maximum(lengths - 1, 0)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+        logits = unembed_apply(params["unembed"], params["embed"],
+                               h_last, cfg)
+        return logits[:, 0, :].astype(jnp.float32), cache
+
+    def decode_step(self, params: Params, token: jax.Array, cache: Params,
+                    pos, paged: Optional[Params] = None,
+                    page_size: Optional[int] = None
+                    ) -> Tuple[jax.Array, Params]:
+        """One-token decode. token: (B,) int32; pos: scalar int32 (the
+        absolute position being written). Returns (logits (B,V), cache).
+
+        Paged mode (``paged={"block_tables": (B, P_max)}`` + static
+        ``page_size``): ``cache`` is the page pool from
+        :meth:`init_paged_cache` and ``pos`` is a per-request (B,) vector
+        of write positions, -1 marking idle slots."""
+        cfg = self.cfg
+        h = embed_apply(params["embed"], token[:, None], cfg)
+        pl = self._prefix_len(None)
+        cache = dict(cache)
+
+        if cfg.prefix:
+            newp = {}
+            for i, kind in enumerate(cfg.prefix):
+                h, c, _ = block_apply(
+                    cfg, kind, params["prefix"][str(i)], h,
+                    cache=cache["prefix"][str(i)], pos=pos, prefix_len=pl,
+                    paged=paged, page_size=page_size)
+                newp[str(i)] = c
+            cache["prefix"] = newp
+
+        if cfg.n_periods:
+            def body(h, xs):
+                pj, cj = xs
+                new_c = {}
+                for j, kind in enumerate(cfg.period):
+                    h, c, _ = block_apply(
+                        cfg, kind, pj[f"s{j}"], h, cache=cj[f"s{j}"],
+                        pos=pos, prefix_len=pl,
+                        paged=paged, page_size=page_size)
                     new_c[f"s{j}"] = c
                 return h, new_c
             h, new_layers = self._scan_or_unroll(

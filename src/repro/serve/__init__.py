@@ -1,12 +1,26 @@
-"""Serving: batched KV-cache decode engine + 2:4-sparse weight path."""
+"""Serving: continuous-batching paged-KV runtime + 2:4-sparse weights.
+
+  engine     ServeEngine — continuous batching (static-bucket escape
+             hatch), greedy/temperature sampling, mesh-resident params
+  kvpool     PagedKVPool — fixed-size KV pages, free-list allocator,
+             per-request block tables (dist-sharded pool)
+  scheduler  Scheduler — join-at-prefill / retire-at-EOS / preemption
+  sparse     2:4 weight packing → kernels.nm_spmm serve path
+"""
 
 from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.kvpool import PagedKVPool
+from repro.serve.scheduler import Scheduler, Sequence, SeqState
 from repro.serve.sparse import sparsify_params, DEFAULT_SPARSE_PATTERNS
 
 __all__ = [
     "ServeEngine",
     "Request",
     "Result",
+    "PagedKVPool",
+    "Scheduler",
+    "Sequence",
+    "SeqState",
     "sparsify_params",
     "DEFAULT_SPARSE_PATTERNS",
 ]

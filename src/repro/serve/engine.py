@@ -1,27 +1,38 @@
-"""Batched serving engine: prefill + KV-cache decode with request bucketing.
+"""Serving engine: continuous batching over a paged KV pool.
 
-Design (CPU-testable, TPU-shaped):
-  - requests are bucketed by prompt length (a shared scalar decode ``pos``
-    keeps every step a single fused dynamic_update_slice — per-request
-    positions would force scatter ops on TPU);
-  - each bucket runs one batched prefill then a jitted decode loop; done
-    requests keep decoding into a scrap position but their output is
-    frozen (standard static-batch serving);
-  - greedy or temperature sampling;
-  - optional 2:4-sparse weights (serve.sparse) — same code path, the
-    sparse matmuls dispatch inside models.layers.linear.
+Default mode ``"continuous"`` (docs/serving.md) runs a step loop over
+serve.scheduler: requests join the running batch the moment a slot and
+prompt pages are free (one paged prefill each), every decode step
+advances *all* running requests one token against the shared page pool
+(kernels.paged_attn / its jnp oracle), and a request retiring at EOS or
+``max_new_tokens`` returns its slot and pages the same step — no decode
+is ever burned into a scrap position.  When the pool runs dry the
+youngest request is preempted (recompute-style) and re-queued.
+
+``mode="static"`` is the legacy escape hatch (PR 2's ``pipeline="off"``
+pattern): requests bucketed by prompt length, one batched prefill + a
+decode loop per bucket, finished requests decoding into scrap until the
+whole bucket drains.  Archs the paged path can't serve (enc-dec,
+modality frontends, recurrent-state mixers) fall back to it
+automatically.
+
+Both paths are greedy-token-identical: paged attention is bit-equal to
+the dense cache math (kernels.ref.paged_attn_ref), and sampling is keyed
+per (request uid, step) in continuous mode so results are independent of
+batch composition and survive preemption-recompute.
 
 On a mesh — passed explicitly or resolved from the active ``repro.dist``
 context — params are sharded by dist.sharding rules (tensor-parallel
-resident, no FSDP: serving re-reads weights every step) and each
-bucket's token batch is placed over the data axes when it divides (see
-launch/serve.py + the decode dry-run).  Without a mesh everything stays
-single-device.
+resident, no FSDP: serving re-reads weights every step), the paged pool
+is placed by the paged cache rules (pages replicated over data, KV heads
+over ``model``), and static-bucket batches are placed over the data axes
+when they divide.  Without a mesh everything stays single-device.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -43,6 +54,19 @@ class Result:
     uid: int
     tokens: np.ndarray                   # generated tokens (≤ max_new)
     prompt_len: int
+    decode_steps: int = 0                # sampling opportunities the
+    #                                      request's slot was live for
+    preemptions: int = 0                 # times recomputed (continuous)
+
+    @property
+    def utilization(self) -> float:
+        """Emitted tokens / slot-steps occupied: 1.0 means every step
+        the request held a slot produced a token; static bucketing
+        drops it by whatever was burned into scrap positions (and
+        continuous preemption by the recomputed prefix)."""
+        if self.decode_steps <= 0:
+            return 0.0
+        return len(self.tokens) / self.decode_steps
 
 
 class ServeEngine:
@@ -56,9 +80,14 @@ class ServeEngine:
         temperature: float = 0.0,
         extra_batch: Optional[Dict[str, jax.Array]] = None,
         mesh=None,
+        mode: str = "continuous",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
     ):
         from repro.dist import current_ctx, dp_axes_of, shard_params
 
+        if mode not in ("continuous", "static"):
+            raise ValueError(f"unknown serve mode {mode!r}")
         self.model = model
         if mesh is None:
             ctx = current_ctx()
@@ -74,8 +103,10 @@ class ServeEngine:
                 self._dp *= mesh.shape[a]
             self._batch_sharding = batch_sharding(mesh, self.dp_axes)
         # resident serving: tensor-parallel only (fsdp_axes=()) — an FSDP
-        # all-gather per decode step would dominate the wire
-        self.params = (shard_params(params, mesh, fsdp_axes=())
+        # all-gather per decode step would dominate the wire.  head_dim
+        # keeps whole heads per model shard (rope-safe, see param_specs)
+        self.params = (shard_params(params, mesh, fsdp_axes=(),
+                                    head_dim=model.cfg.hd)
                        if mesh is not None else params)
         self.max_batch = max_batch
         self.max_len = max_len
@@ -84,6 +115,33 @@ class ServeEngine:
         self.extra_batch = extra_batch or {}
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+        cfg = model.cfg
+        # MoE is excluded: expert-capacity dropping makes each row's
+        # logits depend on batch composition, which breaks the greedy
+        # parity and bit-exact preemption-recompute guarantees below
+        paged_ok = (not cfg.encdec and cfg.frontend is None
+                    and not self.extra_batch and cfg.moe is None
+                    and all(k in ("attn", "attn_local")
+                            for k in (*cfg.prefix, *cfg.period)))
+        self.mode = mode if paged_ok else "static"
+        self.pool = None
+        if self.mode == "continuous":
+            from repro.serve.kvpool import PagedKVPool
+
+            self.page_size = page_size
+            if num_pages is None:
+                # same token capacity as the dense static cache, + scrap
+                num_pages = max_batch * (-(-max_len // page_size)) + 1
+            self.pool = PagedKVPool(
+                model, num_pages=num_pages, page_size=page_size,
+                max_slots=max_batch, max_len=max_len, mesh=mesh)
+            self._decode_paged = jax.jit(
+                functools.partial(model.decode_step, page_size=page_size),
+                donate_argnums=(2,))
+            self._prefill_paged = jax.jit(
+                functools.partial(model.prefill_paged, page_size=page_size),
+                donate_argnums=(2,))
 
     def _place_batch(self, batch: Dict[str, jax.Array]
                      ) -> Dict[str, jax.Array]:
@@ -128,11 +186,13 @@ class ServeEngine:
         out = np.zeros((b, max_new), np.int32)
         done = np.zeros((b,), bool)
         n_emitted = np.zeros((b,), np.int32)
+        steps_run = 0
         tok = None
         for step in range(max_new):
             key, sk = jax.random.split(key)
             tok = self._sample(logits, sk)
             tok_np = np.asarray(jax.device_get(tok))
+            steps_run = step + 1
             for i in range(b):
                 if not done[i] and step < reqs[i].max_new_tokens:
                     out[i, step] = tok_np[i]
@@ -146,15 +206,127 @@ class ServeEngine:
             pos = jnp.asarray(off + plen + step, jnp.int32)
             logits, cache = self._decode(self.params, tok, cache, pos)
 
+        # every request occupies its slot for the whole bucket run —
+        # the difference vs n_emitted is the scrap-position waste that
+        # continuous batching recovers
         return [
-            Result(uid=r.uid, tokens=out[i, :n_emitted[i]], prompt_len=plen)
+            Result(uid=r.uid, tokens=out[i, :n_emitted[i]], prompt_len=plen,
+                   decode_steps=steps_run)
             for i, r in enumerate(reqs)
         ]
 
     # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+    def _sample_seq(self, logits_row: jax.Array, seq, base_key) -> int:
+        """Sample one token for one sequence. Temperature sampling is
+        keyed per (uid, step): independent of batch composition, and a
+        preempted request's recompute replays the identical stream."""
+        if self.temperature <= 0.0:
+            return int(jnp.argmax(logits_row))
+        key = jax.random.fold_in(
+            jax.random.fold_in(base_key, seq.req.uid), len(seq.tokens))
+        return int(jax.random.categorical(
+            key, logits_row / self.temperature))
+
+    def _sample_running(self, logits, running, base_key) -> np.ndarray:
+        """One batched sample for every running slot (single device
+        round-trip per step).  The vmapped per-row (uid, step) keys draw
+        the same stream as :meth:`_sample_seq` row by row."""
+        if self.temperature <= 0.0:
+            return np.asarray(jax.device_get(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32)))[
+                    [seq.slot for seq in running]]
+        rows = logits[jnp.asarray([seq.slot for seq in running])]
+        uids = jnp.asarray([seq.req.uid for seq in running], jnp.int32)
+        steps = jnp.asarray([len(seq.tokens) for seq in running], jnp.int32)
+
+        def draw(uid, step, row):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
+            return jax.random.categorical(key, row / self.temperature)
+
+        return np.asarray(jax.device_get(
+            jax.vmap(draw)(uids, steps, rows).astype(jnp.int32)))
+
+    def _record(self, seq, tok: int, sched) -> None:
+        seq.tokens.append(tok)
+        done = (len(seq.tokens) >= seq.req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id))
+        if done:
+            sched.finish(seq)
+
+    def _generate_continuous(self, requests: Sequence[Request], seed: int
+                             ) -> List[Result]:
+        from repro.serve.scheduler import Scheduler
+
+        pool = self.pool
+        pool.reset()
+        sched = Scheduler(pool, self.max_batch)
+        seqs = []
+        for r in requests:
+            if len(r.prompt) + r.max_new_tokens > self.max_len:
+                raise ValueError(f"request {r.uid} exceeds max_len")
+            seqs.append(sched.submit(r))
+        base_key = jax.random.key(seed)
+        ps = self.page_size
+
+        while sched.has_work():
+            # 1) join-at-prefill: new requests take free slots/pages now
+            for seq in sched.admit():
+                if seq.req.max_new_tokens <= 0:   # nothing to emit
+                    sched.finish(seq)
+                    continue
+                plen = len(seq.req.prompt)
+                tpad = -(-plen // ps) * ps
+                toks = np.zeros((1, tpad), np.int32)
+                toks[0, :plen] = seq.req.prompt
+                bt = jnp.asarray(pool.block_tables[seq.slot][None])
+                logits, pool.kv = self._prefill_paged(
+                    self.params, {"tokens": jnp.asarray(toks)}, pool.kv,
+                    lengths=jnp.asarray([plen], jnp.int32), block_tables=bt)
+                seq.n_written = plen
+                seq.occupied_steps += 1
+                self._record(seq, self._sample_seq(logits[0], seq, base_key),
+                             sched)
+            if not sched.running:
+                continue
+            # 2) extend block tables for this step's writes (may preempt)
+            sched.ensure_decode_capacity()
+            running = list(sched.running)
+            if not running:
+                continue
+            # 3) one decode step over every running slot
+            tok = np.zeros((self.max_batch,), np.int32)
+            pos = np.full((self.max_batch,), -1, np.int32)
+            for seq in running:
+                tok[seq.slot] = seq.tokens[-1]
+                pos[seq.slot] = seq.n_written
+            logits, pool.kv = self._decode_paged(
+                self.params, jnp.asarray(tok), pool.kv, jnp.asarray(pos),
+                paged={"block_tables": pool.tables_device()})
+            sampled = self._sample_running(logits, running, base_key)
+            # 4) advance / retire
+            for i, seq in enumerate(running):
+                seq.n_written += 1
+                seq.occupied_steps += 1
+                self._record(seq, int(sampled[i]), sched)
+
+        return sorted(
+            (Result(uid=s.req.uid,
+                    tokens=np.asarray(s.tokens, np.int32),
+                    prompt_len=len(s.req.prompt),
+                    decode_steps=s.occupied_steps,
+                    preemptions=s.preemptions)
+             for s in seqs),
+            key=lambda r: r.uid)
+
+    # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request], seed: int = 0
                  ) -> List[Result]:
-        """Serve a set of requests (bucketed by prompt length)."""
+        """Serve a set of requests (continuous batching; static mode
+        buckets by prompt length)."""
+        if self.mode == "continuous":
+            return self._generate_continuous(requests, seed)
         buckets: Dict[int, List[Request]] = {}
         for r in requests:
             buckets.setdefault(len(r.prompt), []).append(r)

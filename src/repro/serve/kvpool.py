@@ -1,0 +1,132 @@
+"""Paged KV-cache pool: fixed-size pages + per-slot block tables.
+
+The continuous-batching serve runtime (docs/serving.md) stores every
+request's KV cache in fixed-size pages drawn from one global pool — a
+pytree of (num_pages, page_size, KV, hd) arrays mirroring the model's
+block layout (``LM.init_paged_cache``).  A request owns a *block table*
+row mapping its logical token positions to physical page ids; pages are
+recycled through a host-side free list the moment a request retires or
+is preempted, so cache capacity tracks *live tokens* instead of
+``max_batch × max_len``.
+
+Page 0 is the reserved **scrap page**: never allocated, it absorbs the
+writes of padded prefill positions and idle decode slots (attention
+masks by length, so scrap contents are never read).
+
+On a mesh the pool arrays are placed by the ``dist.sharding`` rules
+(:func:`repro.dist.sharding.paged_kv_block_specs` via
+``LM.paged_cache_specs``): pages replicated over the data axes, KV heads
+over ``model`` when they divide it (deliberately no head_dim fallback —
+see the rules function) — closing the ROADMAP cache-sharding item.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVPool:
+    """Free-list page allocator + the device-resident page arrays.
+
+    The device pytree lives in :attr:`kv` and is updated *functionally*:
+    the engine passes it through the jitted prefill/decode steps
+    (donated) and stores the returned tree back.  Allocation state
+    (free list, block tables, per-slot page counts) is host-side numpy —
+    the scheduler mutates it synchronously between steps.
+    """
+
+    def __init__(
+        self,
+        model,
+        *,
+        num_pages: int,
+        page_size: int,
+        max_slots: int,
+        max_len: int,
+        dtype=None,
+        mesh=None,
+    ):
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is scrap)")
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_slots = max_slots
+        self.pages_per_slot = -(-max_len // page_size)
+        self.kv = model.init_paged_cache(num_pages, page_size, dtype)
+        if mesh is not None:
+            from repro.dist import named_shardings
+
+            self.kv = jax.device_put(
+                self.kv, named_shardings(mesh, model.paged_cache_specs(mesh)))
+        self.block_tables = np.zeros(
+            (max_slots, self.pages_per_slot), np.int32)
+        self._n_pages = np.zeros((max_slots,), np.int32)
+        self._free: List[int] = []
+        self.reset()
+
+    # ----------------------------------------------------------- alloc
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the scrap page)."""
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages off the free list; None if it would overdraw
+        (all-or-nothing, so a half-admitted request never holds pages)."""
+        if n <= 0:              # [-0:] would slice the WHOLE free list
+            return []
+        if n > len(self._free):
+            return None
+        out = self._free[-n:][::-1]
+        del self._free[-n:]
+        return out
+
+    def release(self, pages: Sequence[int]) -> None:
+        assert 0 not in pages, "scrap page is not allocatable"
+        self._free.extend(pages)
+
+    # ------------------------------------------------------ block tables
+    def assign(self, slot: int, pages: Sequence[int]) -> None:
+        """Append ``pages`` to a slot's block table (logical order)."""
+        n = int(self._n_pages[slot])
+        assert n + len(pages) <= self.pages_per_slot, "slot exceeds max_len"
+        self.block_tables[slot, n:n + len(pages)] = pages
+        self._n_pages[slot] = n + len(pages)
+        self._tables_dev = None
+
+    def slot_page_count(self, slot: int) -> int:
+        return int(self._n_pages[slot])
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return self.block_tables[slot, :self._n_pages[slot]].tolist()
+
+    def clear_slot(self, slot: int) -> None:
+        """Release all of a slot's pages and zero its table row."""
+        self.release(self.slot_pages(slot))
+        self.block_tables[slot] = 0
+        self._n_pages[slot] = 0
+        self._tables_dev = None
+
+    def reset(self) -> None:
+        """Recycle every page (between ``generate`` calls).  Device
+        arrays keep their stale contents — attention masks by length, so
+        stale pages are never read."""
+        self.block_tables[:] = 0
+        self._n_pages[:] = 0
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self._tables_dev = None
+
+    def tables_device(self) -> jax.Array:
+        """Device mirror of the block tables, re-uploaded only after a
+        table mutation — steady-state decode steps reuse it."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.block_tables)
+        return self._tables_dev

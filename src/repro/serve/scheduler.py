@@ -1,0 +1,145 @@
+"""Step-level request scheduler for continuous batching.
+
+State machine per request (docs/serving.md):
+
+    WAITING --admit--> RUNNING --finish--> FINISHED
+       ^                  |
+       +----- preempt ----+        (pages released, recompute on re-admit)
+
+Every engine step the scheduler (1) **admits** waiting requests into
+free slots while the pool can back their prompts — join-at-prefill, so a
+retiring request's slot is refilled the very next step instead of
+burning decode into scrap positions; (2) **ensures decode capacity** —
+each running request about to cross a page boundary gets one more page,
+preempting the *youngest* running request (recompute-style: its pages
+and slot are released and it re-queues at the front) when the pool is
+exhausted; (3) **retires** requests at EOS / ``max_new_tokens``,
+recycling slot and pages immediately.
+
+Sampling in the engine is keyed per (request uid, step), so a preempted
+request's recompute reproduces its original tokens exactly — preemption
+is a capacity event, never a quality event.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, List
+
+from repro.serve.kvpool import PagedKVPool
+
+
+class SeqState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Sequence:
+    """Scheduler-side tracking of one request's lifecycle."""
+
+    req: "repro.serve.engine.Request"              # noqa: F821
+    state: SeqState = SeqState.WAITING
+    slot: int = -1
+    n_written: int = 0          # KV entries written (prompt + decoded)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    occupied_steps: int = 0     # sampling opportunities while slotted
+    preemptions: int = 0
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, max_slots: int):
+        self.pool = pool
+        self.max_slots = max_slots
+        self.waiting: Deque[Sequence] = deque()
+        # admission-ordered: append on admit, remove on finish/preempt —
+        # running[-1] is always the youngest (the preemption victim)
+        self.running: List[Sequence] = []
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req) -> Sequence:
+        seq = Sequence(req=req)
+        self.waiting.append(seq)
+        return seq
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # --------------------------------------------------------- admission
+    def _prompt_pages(self, seq: Sequence) -> int:
+        return -(-len(seq.req.prompt) // self.pool.page_size)
+
+    def admit(self) -> List[Sequence]:
+        """Join-at-prefill: move waiting requests into free slots while
+        the pool can back their prompts.  FIFO — the queue head blocking
+        on pages stalls admission (no head-of-line bypass, so a large
+        request cannot starve)."""
+        admitted: List[Sequence] = []
+        while self.waiting and self._free_slots:
+            seq = self.waiting[0]
+            need = self._prompt_pages(seq)
+            if need > self.pool.capacity:
+                raise RuntimeError(
+                    f"request {seq.req.uid}: prompt needs {need} pages but "
+                    f"the pool only has {self.pool.capacity} — raise "
+                    f"num_pages or max_len")
+            pages = self.pool.alloc(need)
+            if pages is None:
+                break
+            self.waiting.popleft()
+            seq.slot = self._free_slots.pop()
+            self.pool.assign(seq.slot, pages)
+            seq.state = SeqState.RUNNING
+            self.running.append(seq)
+            admitted.append(seq)
+        return admitted
+
+    # -------------------------------------------------- decode capacity
+    def ensure_decode_capacity(self) -> None:
+        """Before a decode step: every running request writing position
+        ``n_written`` must have page ``n_written // page_size`` mapped.
+        Pool exhausted → preempt the youngest running request and retry
+        (its pages come back to the free list)."""
+        ps = self.pool.page_size
+        for seq in list(self.running):       # oldest first
+            if seq.state is not SeqState.RUNNING:
+                continue                     # preempted below, this pass
+            while self.pool.slot_page_count(seq.slot) <= seq.n_written // ps:
+                page = self.pool.alloc(1)
+                if page is not None:
+                    self.pool.assign(seq.slot, page)
+                    continue
+                victim = self.running[-1]    # youngest
+                if victim is seq and len(self.running) == 1:
+                    raise RuntimeError(
+                        "kv pool exhausted by a single request — raise "
+                        "num_pages")
+                self.preempt(victim)
+                if victim is seq:
+                    break                    # re-queued; stop extending
+
+    # --------------------------------------------------------- lifecycle
+    def preempt(self, seq: Sequence) -> None:
+        """Recompute-style preemption: drop slot+pages+generated tokens
+        and re-queue at the FRONT (deterministic per-uid sampling keys
+        regenerate the identical prefix on re-admission)."""
+        self._release(seq)
+        seq.state = SeqState.WAITING
+        seq.n_written = 0
+        seq.tokens = []
+        seq.preemptions += 1
+        self.waiting.appendleft(seq)
+
+    def finish(self, seq: Sequence) -> None:
+        self._release(seq)
+        seq.state = SeqState.FINISHED
+
+    def _release(self, seq: Sequence) -> None:
+        self.pool.clear_slot(seq.slot)
+        self._free_slots.append(seq.slot)
+        self.running.remove(seq)
+        seq.slot = -1

@@ -86,3 +86,51 @@ def test_flash_attn_bf16():
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------------------
+def _paged_setup(key, b, kv, g, hd, n_pages, ps, pmax, dtype=jnp.float32):
+    q = jax.random.normal(key, (b, kv, g, hd)).astype(dtype)
+    kp = jax.random.normal(jax.random.fold_in(key, 1),
+                           (n_pages, ps, kv, hd)).astype(dtype)
+    vp = jax.random.normal(jax.random.fold_in(key, 2),
+                           (n_pages, ps, kv, hd)).astype(dtype)
+    # distinct physical pages per request, in logical order
+    bt = np.zeros((b, pmax), np.int32)
+    pid = 1
+    rng = np.random.default_rng(7)
+    lengths = rng.integers(0, pmax * ps + 1, size=b)
+    for i in range(b):
+        for j in range(-(-int(lengths[i]) // ps)):
+            bt[i, j] = pid
+            pid += 1
+    assert pid <= n_pages
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("b,kv,g,hd,ps,pmax", [
+    (3, 2, 2, 16, 8, 3), (2, 1, 4, 32, 16, 2), (4, 4, 1, 64, 8, 4)])
+def test_paged_attn_kernel_vs_ref(b, kv, g, hd, ps, pmax):
+    key = jax.random.key(b * hd + ps)
+    q, kp, vp, bt, lengths = _paged_setup(key, b, kv, g, hd,
+                                          b * pmax + 1, ps, pmax)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, use_kernel=True)
+    want = ref.paged_attn_ref(q, kp, vp, bt, lengths)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(want)[live],
+                               rtol=2e-5, atol=2e-5)
+    # idle slots (length 0) come back as exact zeros from the kernel
+    assert (np.asarray(got)[~live] == 0).all()
+
+
+def test_paged_attn_kernel_windowed():
+    key = jax.random.key(42)
+    q, kp, vp, bt, lengths = _paged_setup(key, 3, 2, 2, 16, 10, 8, 3)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, window=5,
+                              use_kernel=True)
+    want = ref.paged_attn_ref(q, kp, vp, bt, lengths, window=5)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(want)[live],
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,399 @@
+"""Continuous-batching serve runtime: paged KV pool, scheduler, engine.
+
+Covers the ISSUE-3 acceptance surface: pool alloc/release/preemption
+unit behavior, paged-vs-dense decode bit-parity (greedy, CPU),
+continuous-vs-static engine equivalence (plain, under a mesh, and with
+2:4-sparse weights), and the Result utilization accounting.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import LM
+from repro.serve import (PagedKVPool, Request, Scheduler, SeqState,
+                         ServeEngine)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def tiny_random():
+    """Random-init full tiny LM with a sharpened head: greedy argmax
+    gaps are wide enough to be robust to sharding reduction order."""
+    cfg = get_config("paper_tiny_lm")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    params["unembed"]["head"] = params["unembed"]["head"] * 8.0
+    return model, params
+
+
+def _mixed_requests(vocab, n=10):
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, vocab, size=(4, 7, 12)[i % 3],
+                                    dtype=np.int32),
+                max_new_tokens=(2, 5, 9, 14)[i % 4])
+        for i in range(n)
+    ]
+
+
+# ======================================================================
+# kvpool
+# ======================================================================
+def test_pool_alloc_release(tiny_random):
+    model, _ = tiny_random
+    pool = PagedKVPool(model, num_pages=9, page_size=8, max_slots=4,
+                       max_len=32)
+    assert pool.capacity == 8 and pool.free_pages == 8
+    a = pool.alloc(3)
+    assert len(a) == 3 and 0 not in a          # page 0 is scrap
+    b = pool.alloc(5)
+    assert pool.free_pages == 0
+    assert pool.alloc(1) is None               # exhausted, all-or-nothing
+    pool.release(b)
+    assert pool.free_pages == 5
+    c = pool.alloc(5)
+    assert sorted(c) == sorted(b)
+    # n=0 must not touch the free list ([-0:] slices everything)
+    assert pool.alloc(0) == []
+    assert pool.free_pages == 0
+
+
+def test_pool_block_tables(tiny_random):
+    model, _ = tiny_random
+    pool = PagedKVPool(model, num_pages=9, page_size=8, max_slots=2,
+                       max_len=32)
+    pages = pool.alloc(2)
+    pool.assign(0, pages)
+    assert pool.slot_page_count(0) == 2
+    assert pool.slot_pages(0) == pages
+    np.testing.assert_array_equal(pool.block_tables[0, :2], pages)
+    pool.clear_slot(0)
+    assert pool.slot_page_count(0) == 0
+    assert (pool.block_tables[0] == 0).all()
+    assert pool.free_pages == 8
+    pool.reset()
+    assert pool.free_pages == 8
+
+
+# ======================================================================
+# scheduler
+# ======================================================================
+def _sched(model, num_pages=17, page_size=8, max_slots=2, max_len=64):
+    pool = PagedKVPool(model, num_pages=num_pages, page_size=page_size,
+                       max_slots=max_slots, max_len=max_len)
+    return Scheduler(pool, max_slots), pool
+
+
+def test_scheduler_admission_and_retire(tiny_random):
+    model, _ = tiny_random
+    sched, pool = _sched(model)
+    seqs = [sched.submit(Request(uid=i, prompt=np.arange(6, dtype=np.int32)))
+            for i in range(3)]
+    admitted = sched.admit()
+    assert [s.req.uid for s in admitted] == [0, 1]   # 2 slots, FIFO
+    assert all(s.state is SeqState.RUNNING for s in admitted)
+    assert pool.free_pages == pool.capacity - 2      # 1 prompt page each
+    sched.finish(seqs[0])                            # retire-at-EOS
+    assert seqs[0].state is SeqState.FINISHED
+    assert [s.req.uid for s in sched.admit()] == [2]  # slot recycled
+    assert sched.has_work()
+
+
+def test_scheduler_preempts_youngest(tiny_random):
+    model, _ = tiny_random
+    # 4 pages: two 1-page prompts admit, then growth exhausts the pool
+    sched, pool = _sched(model, num_pages=5, page_size=8)
+    a = sched.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32)))
+    b = sched.submit(Request(uid=1, prompt=np.arange(8, dtype=np.int32)))
+    assert len(sched.admit()) == 2
+    for s, n in ((a, 8), (b, 8)):
+        s.n_written = n
+        s.tokens = [1]
+    pool.alloc(pool.free_pages)                      # drain the free list
+    sched.ensure_decode_capacity()
+    # the OLDEST request got the victim's page; the youngest re-queued
+    assert a.state is SeqState.RUNNING
+    assert pool.slot_page_count(a.slot) == 2
+    assert b.state is SeqState.WAITING
+    assert b.preemptions == 1 and b.n_written == 0 and b.tokens == []
+    assert sched.waiting[0] is b                     # front of the queue
+
+
+def test_scheduler_single_request_exhaustion(tiny_random):
+    model, _ = tiny_random
+    sched, pool = _sched(model, num_pages=2, page_size=8, max_slots=1)
+    a = sched.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32)))
+    assert sched.admit() == [a]
+    a.n_written = 8
+    with pytest.raises(RuntimeError, match="exhausted"):
+        sched.ensure_decode_capacity()
+
+
+def test_scheduler_oversized_prompt_raises(tiny_random):
+    model, _ = tiny_random
+    sched, _ = _sched(model, num_pages=3, page_size=8, max_len=64)
+    sched.submit(Request(uid=0, prompt=np.zeros(40, np.int32)))
+    with pytest.raises(RuntimeError, match="prompt needs"):
+        sched.admit()
+
+
+# ======================================================================
+# engine: paged vs dense equivalence
+# ======================================================================
+def test_continuous_matches_static_greedy(tiny_random):
+    model, params = tiny_random
+    reqs = _mixed_requests(model.cfg.vocab_size)
+    static = ServeEngine(model, params, max_batch=4, max_len=48,
+                         mode="static")
+    cont = ServeEngine(model, params, max_batch=4, max_len=48,
+                       mode="continuous", page_size=8)
+    rs = static.generate(reqs)
+    rc = cont.generate(reqs)
+    for a, b in zip(rs, rc):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_paged_decode_bit_parity(tiny_random):
+    """Model-level: paged prefill+decode logits are BIT-identical to the
+    dense cache path (greedy CPU acceptance criterion)."""
+    import functools
+
+    model, params = tiny_random
+    ps = 8
+    prompt = np.asarray([1, 2, 3, 4, 5], np.int32)
+    L = len(prompt)
+
+    cache = model.init_cache(1, 48)
+    lg, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache)
+    dense = [np.asarray(lg[0])]
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    for step in range(6):
+        lg, cache = model.decode_step(params, tok, cache,
+                                      jnp.asarray(L + step, jnp.int32))
+        dense.append(np.asarray(lg[0]))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    kv = model.init_paged_cache(12, ps)
+    bt = np.zeros((1, 6), np.int32)
+    bt[0, 0] = 3
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :L] = prompt
+    lg, kv = model.prefill_paged(
+        params, {"tokens": jnp.asarray(toks)}, kv,
+        lengths=jnp.asarray([L], jnp.int32),
+        block_tables=jnp.asarray(bt), page_size=ps)
+    paged = [np.asarray(lg[0])]
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    n = L
+    for step in range(6):
+        if n // ps >= 1 and bt[0, n // ps] == 0:
+            bt[0, n // ps] = 5 + n // ps
+        lg, kv = model.decode_step(
+            params, tok, kv, jnp.asarray([n], jnp.int32),
+            paged={"block_tables": jnp.asarray(bt)}, page_size=ps)
+        paged.append(np.asarray(lg[0]))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        n += 1
+
+    for d, p in zip(dense, paged):
+        np.testing.assert_array_equal(d, p)
+
+
+def test_preemption_reproduces_tokens(tiny_random):
+    """A pool too small for the full workload forces preemptions; the
+    recompute must reproduce the exact static tokens."""
+    model, params = tiny_random
+    reqs = _mixed_requests(model.cfg.vocab_size)
+    static = ServeEngine(model, params, max_batch=4, max_len=48,
+                         mode="static")
+    small = ServeEngine(model, params, max_batch=4, max_len=48,
+                        mode="continuous", page_size=8, num_pages=8)
+    rs = static.generate(reqs)
+    rp = small.generate(reqs)
+    assert sum(r.preemptions for r in rp) > 0
+    for a, b in zip(rs, rp):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_continuous_eos_stops_early(tiny_random):
+    model, params = tiny_random
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, page_size=8)
+    probe = eng.generate(
+        [Request(uid=0, prompt=np.asarray([3, 1], np.int32),
+                 max_new_tokens=1)])
+    eos = int(probe[0].tokens[0])
+    eng2 = ServeEngine(model, params, max_batch=2, max_len=64,
+                       page_size=8, eos_id=eos)
+    res = eng2.generate(
+        [Request(uid=0, prompt=np.asarray([3, 1], np.int32),
+                 max_new_tokens=8)])
+    assert len(res[0].tokens) == 1 and int(res[0].tokens[0]) == eos
+
+
+def test_continuous_temperature_deterministic(tiny_random):
+    """Per-(uid, step) sampling keys: the same request sampled alone or
+    in a batch draws the same stream."""
+    model, params = tiny_random
+    eng = ServeEngine(model, params, max_batch=4, max_len=48,
+                      temperature=1.0, page_size=8)
+    reqs = _mixed_requests(model.cfg.vocab_size, n=4)
+    batched = eng.generate(reqs, seed=7)
+    solo = eng.generate([reqs[2]], seed=7)
+    np.testing.assert_array_equal(batched[2].tokens, solo[0].tokens)
+
+
+def test_utilization_accounting(tiny_random):
+    """Satellite: Result.decode_steps exposes the static scrap waste
+    that continuous batching recovers."""
+    model, params = tiny_random
+    reqs = [Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2),
+            Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=12)]
+    rs = ServeEngine(model, params, max_batch=2, max_len=32,
+                     mode="static").generate(reqs)
+    rc = ServeEngine(model, params, max_batch=2, max_len=32,
+                     mode="continuous", page_size=8).generate(reqs)
+    # static: the short request holds its slot for all 12 bucket steps
+    assert rs[0].decode_steps == 12
+    assert rs[0].utilization == pytest.approx(2 / 12)
+    assert rs[1].utilization == 1.0
+    # continuous: every occupied step emits a token
+    assert rc[0].decode_steps == 2 and rc[0].utilization == 1.0
+    assert rc[1].utilization == 1.0
+
+
+def test_zero_max_new_tokens_matches_static(tiny_random):
+    model, params = tiny_random
+    reqs = [Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=0),
+            Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=3)]
+    rs = ServeEngine(model, params, max_batch=2, max_len=32,
+                     mode="static").generate(reqs)
+    rc = ServeEngine(model, params, max_batch=2, max_len=32,
+                     mode="continuous", page_size=8).generate(reqs)
+    assert len(rs[0].tokens) == 0 and len(rc[0].tokens) == 0
+    np.testing.assert_array_equal(rs[1].tokens, rc[1].tokens)
+
+
+def test_ssm_arch_falls_back_to_static():
+    from repro.configs.paper_tiny_lm import MAMBA
+
+    model = LM(MAMBA)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                      mode="continuous")
+    assert eng.mode == "static"
+    res = eng.generate([Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                                max_new_tokens=3)])
+    assert len(res[0].tokens) == 3
+
+
+def test_moe_arch_falls_back_to_static():
+    """MoE expert-capacity dropping makes logits batch-dependent, so the
+    continuous path's parity guarantees can't hold — must fall back."""
+    from repro.configs import get_smoke
+
+    model = LM(get_smoke("phi3_5_moe_42b_a6_6b"))
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                      mode="continuous")
+    assert eng.mode == "static"
+
+
+# ======================================================================
+# equivalence under a mesh / with sparse weights
+# ======================================================================
+def test_continuous_matches_static_host_mesh(tiny_random):
+    from repro.dist import make_host_mesh, use_mesh
+
+    model, params = tiny_random
+    reqs = _mixed_requests(model.cfg.vocab_size, n=6)
+    base = ServeEngine(model, params, max_batch=4, max_len=48,
+                       mode="static").generate(reqs)
+    with use_mesh(make_host_mesh()):
+        got = ServeEngine(model, params, max_batch=4, max_len=48,
+                          mode="continuous", page_size=8).generate(reqs)
+    for a, b in zip(base, got):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_continuous_matches_static_2x4_mesh():
+    """Real multi-device equivalence (subprocess: the parent must keep
+    its single CPU device, as in test_dist.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = """
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.models import LM
+        from repro.dist import use_mesh
+        from repro.serve import Request, ServeEngine
+
+        cfg = get_config("paper_tiny_lm")
+        model = LM(cfg)
+        params = model.init(jax.random.key(0))
+        params["unembed"]["head"] = params["unembed"]["head"] * 8.0
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=(4, 8)[i % 2],
+                                            dtype=np.int32),
+                        max_new_tokens=(3, 6, 10)[i % 3])
+                for i in range(8)]
+        nomesh = ServeEngine(model, params, max_batch=4, max_len=48,
+                             mode="continuous", page_size=8).generate(reqs)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
+            static = ServeEngine(model, params, max_batch=4, max_len=48,
+                                 mode="static").generate(reqs)
+            cont = ServeEngine(model, params, max_batch=4, max_len=48,
+                               mode="continuous", page_size=8
+                               ).generate(reqs)
+        for a, b, c in zip(static, cont, nomesh):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.tokens, c.tokens)
+        print("OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout
+
+
+def test_continuous_with_sparse_weights(tiny_lm):
+    """2:4-prune → pack → nm_spmm path through the PAGED runtime emits
+    the same greedy tokens as the static engine on the same weights."""
+    from repro.core import PruningEngine
+    from repro.data import calibration_batches
+    from repro.serve import sparsify_params
+
+    model, params, _ = tiny_lm
+    calib = calibration_batches(model.cfg, n_samples=8, seq_len=64, batch=8)
+    eng = PruningEngine(model, "2:4", method="SM", blocksize=64)
+    pruned, _ = eng.run(params, calib)
+    packed = sparsify_params(pruned, patterns=(r"mlp/(wi|wg|wo)$",))
+
+    reqs = [Request(uid=i, prompt=np.asarray([2, 4, 6, 8], np.int32),
+                    max_new_tokens=4 + i) for i in range(3)]
+    rs = ServeEngine(model, packed, max_batch=2, max_len=32,
+                     mode="static").generate(reqs)
+    rc = ServeEngine(model, packed, max_batch=2, max_len=32,
+                     mode="continuous", page_size=8).generate(reqs)
+    for a, b in zip(rs, rc):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
