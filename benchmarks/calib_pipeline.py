@@ -67,7 +67,9 @@ def run(fast: bool = False) -> List["BenchResult"]:
         BenchResult("calib_pipeline/local/pipelined",
                     r["local_pipelined_s"] * 1e6,
                     f"wall={r['local_pipelined_s']:.2f}s "
-                    f"speedup={local_speedup:.2f}x"),
+                    f"speedup={local_speedup:.2f}x",
+                    metrics={"prune_wall_s": r["local_pipelined_s"],
+                             "speedup": local_speedup}),
         BenchResult(
             "calib_pipeline/local/stages", r["local_stage_total_s"] * 1e6,
             f"capture={r['local_capture_s']:.2f}s "
@@ -78,7 +80,9 @@ def run(fast: bool = False) -> List["BenchResult"]:
                     f"wall={r['serial_s']:.2f}s"),
         BenchResult("calib_pipeline/mesh/pipelined", r["pipelined_s"] * 1e6,
                     f"wall={r['pipelined_s']:.2f}s speedup={speedup:.2f}x "
-                    f"shards={r['calib_shards']}"),
+                    f"shards={r['calib_shards']}",
+                    metrics={"prune_wall_s": r["pipelined_s"],
+                             "speedup": speedup}),
         BenchResult(
             "calib_pipeline/mesh/stages", r["stage_total_s"] * 1e6,
             f"capture={r['capture_s']:.2f}s solve={r['solve_s']:.2f}s "

@@ -12,11 +12,10 @@ from __future__ import annotations
 import dataclasses
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,6 +35,9 @@ class BenchResult:
     name: str
     us_per_call: float        # wall time of the measured operation (µs)
     derived: str              # the table's metric, e.g. "ppl=8.07"
+    # machine-readable metrics for BENCH_<sha>.json / the CI bench gate
+    # (benchmarks.gate): keys named "tok_s*" gate hard on regression
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"

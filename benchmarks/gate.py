@@ -1,0 +1,86 @@
+"""CI bench-regression gate: diff a BENCH_<sha>.json against baseline.
+
+  PYTHONPATH=src python -m benchmarks.gate BENCH_<sha>.json \\
+      benchmarks/baseline.json [--threshold 0.2]
+
+Gate policy (docs in benchmarks/README.md):
+
+  - **throughput** (any metric named ``tok_s``): HARD failure when the
+    current value drops more than ``--threshold`` (default 20%) below
+    the baseline — the regression gate;
+  - everything else (utilization, speedup ratios, prune wall-clock) is
+    reported as an informational delta only: wall-clocks and thin
+    speedup margins vary too much across runner generations to fail a
+    PR on.
+
+Results present on only one side are reported and skipped (renamed or
+newly added benchmarks don't break the gate; refresh the baseline with
+``python -m benchmarks.run --smoke --json benchmarks/baseline.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HARD_METRICS = ("tok_s",)  # higher is better, gated on regression
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(current: dict, baseline: dict, threshold: float):
+    """Returns (failures, report_lines)."""
+    failures, lines = [], []
+    cur, base = current["results"], baseline["results"]
+    for name in sorted(set(cur) | set(base)):
+        if name not in cur:
+            lines.append(f"  {name}: only in baseline (skipped)")
+            continue
+        if name not in base:
+            lines.append(f"  {name}: new (no baseline)")
+            continue
+        cm, bm = cur[name].get("metrics", {}), base[name].get("metrics", {})
+        for key in sorted(set(cm) & set(bm)):
+            c, b = cm[key], bm[key]
+            if not b:
+                continue
+            delta = c / b - 1.0
+            tag = f"  {name}.{key}: {b:.3f} -> {c:.3f} ({delta:+.1%})"
+            if key in HARD_METRICS and delta < -threshold:
+                failures.append(tag + f"  [> {threshold:.0%} regression]")
+            lines.append(tag)
+    return failures, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_<sha>.json from this run")
+    ap.add_argument("baseline", help="checked-in benchmarks/baseline.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.2,
+        help="allowed fractional throughput drop (default 0.2)",
+    )
+    args = ap.parse_args()
+
+    current, baseline = _load(args.current), _load(args.baseline)
+    failures, lines = compare(current, baseline, args.threshold)
+    print(
+        f"bench gate: {current.get('sha', '?')[:12]} vs baseline "
+        f"{baseline.get('sha', '?')[:12]} (threshold {args.threshold:.0%})"
+    )
+    print("\n".join(lines))
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        print("\n".join(failures), file=sys.stderr)
+        raise SystemExit(1)
+    print("gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import BenchResult
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def _time(fn, *args, reps=3):

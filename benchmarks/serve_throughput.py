@@ -2,20 +2,23 @@
 
 A mixed-length workload (short+long prompts, heavily varied
 ``max_new_tokens`` — the shape real traffic has) through both
-``ServeEngine`` modes on the trained tiny LM:
+``ServeEngine`` modes on the trained tiny LM AND the trained tiny Mamba
+(the recurrent-state pool path — no static fallback):
 
   - static: requests bucketed by prompt length; each bucket decodes
     until its LONGEST request finishes, burning every other slot's
     steps into scrap positions;
-  - continuous: the paged-KV step loop — retiring requests hand their
-    slot and pages to the admission queue the same step.
+  - continuous: the paged step loop — prompts stream in as fixed-size
+    prefill chunks interleaved with decode, retiring requests hand
+    their slot and pages to the admission queue the same step.
 
 Reports tokens/sec for both, the speedup, and the mean per-request
 slot-utilization (Result.decode_steps accounting) — the fraction of
-occupied decode steps that actually emitted a token, i.e. exactly what
+occupied steps that actually emitted a token, i.e. exactly what
 continuous batching recovers.  Greedy outputs must be token-identical
 between the modes (the engines share one model/params); any mismatch is
-a hard failure.
+a hard failure.  The ``metrics`` dicts feed ``BENCH_<sha>.json`` and
+the CI bench-regression gate (benchmarks.gate).
 """
 
 from __future__ import annotations
@@ -37,6 +40,7 @@ MAX_NEWS = (2, 4, 8, 48)
 MAX_LEN = 96
 MAX_BATCH = 8
 PAGE_SIZE = 16
+PREFILL_CHUNK = 16
 
 
 def _workload(n: int, vocab: int) -> List["repro.serve.Request"]:
@@ -52,18 +56,21 @@ def _workload(n: int, vocab: int) -> List["repro.serve.Request"]:
     ]
 
 
-def run(fast: bool = False) -> List["BenchResult"]:
-    from benchmarks.common import BenchResult, trained_model
+def _bench_pair(tag: str, model, params, n_requests: int
+                ) -> List["BenchResult"]:
+    """Static vs continuous on one model; hard-fails on token mismatch."""
+    from benchmarks.common import BenchResult
     from repro.serve import ServeEngine
 
-    model, params, _ = trained_model("lm")
-    n_requests = 16 if fast else 24
     reqs = _workload(n_requests, model.cfg.vocab_size)
-
     static = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
                          mode="static")
     cont = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                       mode="continuous", page_size=PAGE_SIZE)
+                       mode="continuous", page_size=PAGE_SIZE,
+                       prefill_chunk=PREFILL_CHUNK)
+    if cont.mode != "continuous":
+        raise RuntimeError(f"{tag}: fell back to static — the paged "
+                           f"runtime must serve this arch")
 
     # warm both jit caches off the measured clock with a FULL pass of
     # the exact workload — jit specializes on bucket batch and prompt-pad
@@ -82,8 +89,8 @@ def run(fast: bool = False) -> List["BenchResult"]:
     for a, b in zip(rs, rc):
         if not np.array_equal(a.tokens, b.tokens):
             raise RuntimeError(
-                f"continuous != static greedy tokens for uid {a.uid}: "
-                f"{a.tokens.tolist()} vs {b.tokens.tolist()}")
+                f"{tag}: continuous != static greedy tokens for uid "
+                f"{a.uid}: {a.tokens.tolist()} vs {b.tokens.tolist()}")
 
     toks = sum(len(r.tokens) for r in rs)
     tps_static = toks / static_s
@@ -92,12 +99,29 @@ def run(fast: bool = False) -> List["BenchResult"]:
     util_cont = float(np.mean([r.utilization for r in rc]))
     speedup = tps_cont / tps_static
     return [
-        BenchResult("serve_throughput/static", static_s * 1e6,
-                    f"tok_s={tps_static:.1f} util={util_static:.0%}"),
-        BenchResult("serve_throughput/continuous", cont_s * 1e6,
+        BenchResult(f"serve_throughput/{tag}/static", static_s * 1e6,
+                    f"tok_s={tps_static:.1f} util={util_static:.0%}",
+                    metrics={"tok_s": tps_static, "util": util_static}),
+        BenchResult(f"serve_throughput/{tag}/continuous", cont_s * 1e6,
                     f"tok_s={tps_cont:.1f} util={util_cont:.0%} "
-                    f"speedup={speedup:.2f}x"),
+                    f"speedup={speedup:.2f}x",
+                    metrics={"tok_s": tps_cont, "util": util_cont,
+                             "speedup": speedup}),
     ]
+
+
+def run(fast: bool = False) -> List["BenchResult"]:
+    from benchmarks.common import trained_model
+
+    n_requests = 16 if fast else 24
+    results = []
+    model, params, _ = trained_model("lm")
+    results += _bench_pair("lm", model, params, n_requests)
+    # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config
+    # through mode="continuous", tokens identical to the dense cache)
+    model, params, _ = trained_model("mamba")
+    results += _bench_pair("mamba", model, params, n_requests)
+    return results
 
 
 if __name__ == "__main__":

@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import SparsitySpec, current_ctx, prune_matrix, use_mesh
 from repro.core.calibration import CalibrationSet

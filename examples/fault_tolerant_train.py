@@ -52,7 +52,7 @@ def main():
     print(f"max |interrupted - uninterrupted| param diff: {diff:.2e} "
           f"(bit-exact resume: {diff == 0.0})")
 
-    losses = [json.loads(l)["loss"] for l in open(out_b + "/metrics.jsonl")]
+    losses = [json.loads(line)["loss"] for line in open(out_b + "/metrics.jsonl")]
     print(f"loss trace (int8 EF-compressed grads): "
           f"{[round(x, 3) for x in losses]}")
 

@@ -8,7 +8,6 @@ reconstruction error ‖δw·x‖² — the paper's objective (Eq. 3).
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro import HessianAccumulator, SparsitySpec, prune_matrix
 from repro.core.pruner import reconstruction_error

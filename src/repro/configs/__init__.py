@@ -7,7 +7,7 @@ dims) and SMOKE (a reduced same-family variant for CPU tests).  Shapes
 """
 
 import importlib
-from typing import Dict, List
+from typing import Dict
 
 from repro.models.base import ArchConfig
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.hessian import HessianAccumulator
 

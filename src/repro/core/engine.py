@@ -43,7 +43,6 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.calibration import CalibrationSet, Capture
 from repro.core.pruner import PruneResult, prune_matrix

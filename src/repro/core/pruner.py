@@ -19,7 +19,6 @@ is precisely the paper's fix for SparseGPT's frozen-left-columns drawback.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -209,6 +208,6 @@ def prune_matrix(
         stats={
             "final_mrp_loss": _maybe_float(block_losses[-1]),
             "block_mrp_losses": tuple(
-                _maybe_float(l) for l in block_losses),
+                _maybe_float(bl) for bl in block_losses),
         },
     )

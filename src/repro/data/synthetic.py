@@ -15,8 +15,6 @@ token stream, so checkpoint-resume is bit-exact (tested).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

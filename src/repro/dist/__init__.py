@@ -41,6 +41,7 @@ from repro.dist.sharding import (
     moe_dispatch_specs,
     named_shardings,
     paged_kv_block_specs,
+    paged_state_block_specs,
     param_shardings,
     param_specs,
     replicated,
@@ -68,6 +69,7 @@ __all__ = [
     "moe_dispatch_specs",
     "named_shardings",
     "paged_kv_block_specs",
+    "paged_state_block_specs",
     "param_shardings",
     "param_specs",
     "replicated",

@@ -328,6 +328,46 @@ def paged_kv_block_specs(
     return {"k": spec, "v": spec}
 
 
+def paged_state_block_specs(
+    kind: str,
+    dims: dict,
+    mesh: Mesh,
+    *,
+    extra_lead: int = 0,
+    tp_axis: str = "model",
+):
+    """PartitionSpec dict for one slot-pooled recurrent-state block
+    (serve.kvpool.StatePool — the state twin of
+    :func:`paged_kv_block_specs`).
+
+    State leaves carry a leading ``max_slots`` dim that never shards
+    (any device serves any request — same policy as the page dims).
+    The width dim shards over the model axis only when the split is
+    head-aligned: d_inner for mamba (elementwise + N-contractions only,
+    always safe when divisible), whole mLSTM/sLSTM *heads* — like the
+    pool's no-head_dim-fallback rule, a sub-head split would move a
+    contraction across the model axis and change the f32 reduction
+    order the paged/dense bit-parity rests on.
+    """
+    tp = mesh.shape[tp_axis] if tp_axis in mesh.axis_names else 1
+    lead = [None] * extra_lead
+    if kind == "mamba":
+        di = tp_axis if tp > 1 and dims["d_inner"] % tp == 0 else None
+        return {"conv": P(*lead, None, None, di),
+                "ssm": P(*lead, None, di, None)}
+    if kind == "mlstm":
+        hsp = tp_axis if tp > 1 and dims["num_heads"] % tp == 0 else None
+        return {"c": P(*lead, None, hsp, None, None),
+                "n": P(*lead, None, hsp, None),
+                "m": P(*lead, None, hsp)}
+    if kind == "slstm":
+        ok = (tp > 1 and dims["num_heads"] % tp == 0
+              and dims["d_model"] % tp == 0)
+        dsp = tp_axis if ok else None
+        return {k: P(*lead, None, dsp) for k in "cnhm"}
+    raise ValueError(kind)
+
+
 # ----------------------------------------------------------------------
 # MoE expert-dispatch rules (models/moe.py shard_map)
 # ----------------------------------------------------------------------

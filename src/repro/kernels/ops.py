@@ -8,7 +8,7 @@ Mosaic.  All wrappers handle padding to tile multiples.
 
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -22,6 +22,11 @@ from repro.kernels.nm_select import nm_select as _nm_select
 from repro.kernels.nm_spmm import nm_spmm as _nm_spmm
 
 INTERPRET = jax.default_backend() != "tpu"
+# JAX_PALLAS_INTERPRET=1 (the CI tier-1 kernel step) forces the Pallas
+# kernel BODIES — in interpret mode — through every dispatch that would
+# otherwise take a jnp-oracle shortcut off-TPU (paged_attention below),
+# so kernels/paged_attn.py logic is exercised on CPU-only runners
+FORCE_PALLAS = os.environ.get("JAX_PALLAS_INTERPRET", "") not in ("", "0")
 
 
 def _pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
@@ -104,10 +109,12 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     sits inside the jitted serve decode step and interpret execution
     would dominate the step; ref.paged_attn_ref is the same math and is
     bit-identical to the dense-cache decode path (use_kernel=True forces
-    the kernel, under interpret off-TPU — the parity tests).
+    the kernel, under interpret off-TPU — the parity tests, and
+    JAX_PALLAS_INTERPRET=1 forces it for every default dispatch — the
+    CI kernel-logic step).
     """
     if use_kernel is None:
-        use_kernel = not INTERPRET
+        use_kernel = FORCE_PALLAS or not INTERPRET
     if not use_kernel:
         return ref.paged_attn_ref(q, k_pages, v_pages, block_tables,
                                   lengths, window=window)

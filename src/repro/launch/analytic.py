@@ -20,7 +20,6 @@ All numbers are GLOBAL; divide by chip count for per-device terms.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.models.base import ArchConfig

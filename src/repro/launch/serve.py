@@ -37,6 +37,17 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sampling", default="greedy",
+                    choices=("greedy", "temperature", "top-k", "top-p"),
+                    help="decode sampling: greedy argmax, plain "
+                         "temperature, or top-k / top-p (nucleus) "
+                         "filtering — all keyed per (uid, step) in "
+                         "continuous mode, so preemption-recompute "
+                         "replays identical tokens")
+    ap.add_argument("--top-k", type=int, default=40,
+                    help="k for --sampling top-k")
+    ap.add_argument("--top-p", type=float, default=0.9,
+                    help="nucleus mass for --sampling top-p")
     ap.add_argument("--serve-mode", default="continuous",
                     choices=("continuous", "static"),
                     help="continuous batching (paged KV) or the legacy "
@@ -46,6 +57,9 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=None,
                     help="KV pool size in pages (default: dense-cache "
                          "capacity equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per chunked-prefill step "
+                         "(continuous mode; one jitted shape)")
     add_mesh_argument(ap)
     args = ap.parse_args()
 
@@ -65,13 +79,23 @@ def main() -> None:
             params = sparsify_params(params)
             print("packed 2:4-sparse weights (nm_spmm path)")
 
+        temperature = args.temperature
+        top_k = top_p = None
+        if args.sampling == "top-k":
+            top_k = args.top_k
+        elif args.sampling == "top-p":
+            top_p = args.top_p
+        if args.sampling != "greedy" and temperature <= 0.0:
+            temperature = 1.0          # sampling modes need a live draw
+
         # the engine resolves the active mesh: params go resident
         # tensor-parallel, the paged pool / bucket batches shard by the
         # dist rules
         eng = ServeEngine(model, params, max_batch=8, max_len=args.max_len,
-                          temperature=args.temperature,
+                          temperature=temperature, top_k=top_k, top_p=top_p,
                           mode=args.serve_mode, page_size=args.page_size,
-                          num_pages=args.num_pages)
+                          num_pages=args.num_pages,
+                          prefill_chunk=args.prefill_chunk)
         if eng.mode != args.serve_mode:
             print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
                   f"fell back to {eng.mode}")

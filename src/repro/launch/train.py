@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro import configs as cfglib
 from repro.data import DataPipeline

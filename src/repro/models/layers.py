@@ -260,7 +260,7 @@ def _sdpa_online(q, k, v, nh, kv, *, window=None, prefix_len=None,
     qpos = jnp.arange(t, dtype=jnp.int32)
 
     def body(carry, xs):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc, vc, ci = xs
         kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
         ok = kpos[None, :] <= qpos[:, None]                  # (t, chunk)
@@ -277,10 +277,10 @@ def _sdpa_online(q, k, v, nh, kv, *, window=None, prefix_len=None,
         msafe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(sc - msafe[..., None])
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - msafe), 0.0)
-        l = l * alpha + jnp.sum(p, axis=-1)
+        lsum = lsum * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bkgtc,bckd->bkgtd", p, vc.astype(jnp.float32))
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((b, kv, g, t), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, kv, g, t), jnp.float32)
@@ -291,10 +291,10 @@ def _sdpa_online(q, k, v, nh, kv, *, window=None, prefix_len=None,
         m0 = _seq_constrain(m0, seq_dim=3)
         l0 = _seq_constrain(l0, seq_dim=3)
         a0 = _seq_constrain(a0, seq_dim=3)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         body, (m0, l0, a0),
         (ks, vs, jnp.arange(nck, dtype=jnp.int32)))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     out = jnp.moveaxis(out, 3, 1)                            # (b,t,kv,g,hd)
     return out.reshape(b, t, nh * hd).astype(v.dtype)
 
@@ -371,8 +371,12 @@ def attn_apply(
     pool leaves; ``paged["block_tables"]`` (B, P_max) maps each
     request's logical positions to physical pages.  Prefill additionally
     takes ``paged["lengths"]`` (padded prompt tails write to the scrap
-    page 0); decode takes per-request ``pos`` (B,), -1 marking idle
-    slots.
+    page 0); a chunked prefill (``paged["start"]`` given) writes the
+    chunk's K/V at absolute positions ``start + arange(T)`` and attends
+    over the *gathered slot context* — earlier chunks' keys read back
+    from the pages — so a prompt of any length runs as fixed-size
+    chunks through one jitted shape; decode takes per-request ``pos``
+    (B,), -1 marking idle slots.
     """
     window = cfg.window if kind == "attn_local" else None
     b, t, _ = h.shape
@@ -388,6 +392,40 @@ def attn_apply(
         out = _sdpa(q, k, v, mask, nh, kv)
         y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
         return h + y, cache
+
+    if cache is not None and t > 1 and paged is not None \
+            and paged.get("start") is not None:
+        # chunked paged prefill (B=1 per request): one fixed-size token
+        # chunk at absolute positions start..start+T-1.  The chunk's
+        # K/V is scattered into the pages FIRST, then attention runs
+        # over the gathered slot context — intra-chunk keys and earlier
+        # chunks' keys both read back from the pool, so every chunk of
+        # every prompt shares one jitted shape.
+        lengths = paged["lengths"]                           # (B,)
+        bt = paged["block_tables"]                           # (B, P_max)
+        tpos = paged["start"] + jnp.arange(t, dtype=jnp.int32)
+        positions = tpos[None, :]
+        q, k, v = _qkv(p, h_in, cfg, positions, caps, prefix,
+                       seq_par_ok=False)
+        page = jnp.take_along_axis(
+            bt, tpos[None, :] // page_size, axis=1)          # (B, T)
+        flat = page * page_size + tpos[None, :] % page_size
+        flat = jnp.where(tpos[None, :] < lengths[:, None], flat, 0)
+        k_pages = _paged_write(cache["k"], k, flat)
+        v_pages = _paged_write(cache["v"], v, flat)
+        s_len = bt.shape[1] * page_size
+        kc = k_pages[bt].reshape(b, s_len, kv, hd)
+        vc = v_pages[bt].reshape(b, s_len, kv, hd)
+        kpos = jnp.arange(s_len, dtype=jnp.int32)
+        ok = kpos[None, None, :] <= positions[:, :, None]    # (B, T, S)
+        if window is not None:
+            ok &= kpos[None, None, :] > positions[:, :, None] - window
+        out = _sdpa(q, kc, vc, ok[:, None, None], nh, kv)
+        y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
+        new_cache = dict(cache)
+        new_cache["k"] = k_pages
+        new_cache["v"] = v_pages
+        return h + y, new_cache
 
     if cache is None or t > 1:
         positions = jnp.arange(t)[None, :]

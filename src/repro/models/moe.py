@@ -16,9 +16,8 @@ per-expert routed activations (x, validity) for the per-expert Hessians
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,8 @@ from repro.dist.api import current_ctx
 from repro.dist.compat import shard_map
 from repro.dist.sharding import moe_dispatch_specs
 from repro.models.base import ArchConfig
-from repro.models.layers import Params, _dense_init, linear, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from repro.models.layers import (Params, _dense_init, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init)
 
 
 def moe_init(key, cfg: ArchConfig, dtype) -> Params:

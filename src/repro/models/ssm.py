@@ -18,7 +18,7 @@ sLSTM  (Beck et al. 2024): scalar-memory recurrent LSTM with block-diag
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,11 +58,13 @@ def mamba_init(key, cfg: ArchConfig, dtype) -> Params:
     }
 
 
-def _mamba_ssm_scan(dt, x, b, c, a):
+def _mamba_ssm_scan(dt, x, b, c, a, init=None):
     """Selective-scan core, parallel over T via associative_scan.
 
     dt, x: (B,T,Di) f32;  b, c: (B,T,N) f32;  a: (Di,N) f32 (negative).
-    Returns y: (B,T,Di).
+    ``init`` (B,Di,N): carry-in state (chunked prefill continuation) —
+    the scan's cumulative-decay component replays it as ``A_{1..t}·s0``.
+    Returns (y: (B,T,Di), last state (B,Di,N)).
     """
     abar = jnp.exp(dt[..., None] * a[None, None])          # (B,T,Di,N)
     bx = (dt * x)[..., None] * b[:, :, None, :]            # (B,T,Di,N)
@@ -72,7 +74,9 @@ def _mamba_ssm_scan(dt, x, b, c, a):
         a2, b2 = e2
         return a2 * a1, a2 * b1 + b2
 
-    _, states = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    aprod, states = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    if init is not None:
+        states = states + aprod * init[:, None]
     return jnp.einsum("btdn,btn->btd", states, c), states[:, -1]
 
 
@@ -85,10 +89,18 @@ def mamba_apply(
     cache: Optional[Params] = None,
     pos=None,
     prefix: str = "mamba.",
+    paged: Optional[Params] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Returns (h + mamba(h), new_cache).
 
     cache = {"conv": (B, ck-1, Di), "ssm": (B, Di, N)} for decode (T==1).
+
+    Chunked prefill (``paged`` with "slot"/"start"/"lengths", T>1, the
+    continuous-batching runtime): cache leaves are the slot-pooled
+    state (max_slots leading dim, serve.kvpool.StatePool); the chunk
+    continues slot ``slot``'s state — conv window carried in, scan
+    seeded with the carried SSM state — and positions past the prompt
+    length leave the state untouched (dt masked to 0 ⇒ identity step).
     """
     di, n, r, ck = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
     bsz, t, _ = h.shape
@@ -98,9 +110,24 @@ def mamba_apply(
 
     conv_w = p["conv_w"].astype(jnp.float32)               # (Di, ck)
     x32 = x.astype(jnp.float32)
-    prefill = cache is not None and t > 1
+    chunk = cache is not None and t > 1 and paged is not None
+    prefill = cache is not None and t > 1 and not chunk
 
-    if cache is None or prefill:
+    if chunk:
+        slot = paged["slot"]
+        conv0 = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=0)
+        ssm0 = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=0)
+        tpos = paged["start"] + jnp.arange(t, dtype=jnp.int32)
+        valid = (tpos < paged["lengths"][0])[None, :]      # (1, T)
+        # conv over [carried window ; chunk]
+        xp = jnp.concatenate([conv0.astype(jnp.float32), x32], axis=1)
+        stacked = jnp.stack(
+            [xp[:, i:i + t, :] for i in range(ck)], axis=-1)
+        xc = jnp.einsum("btdk,dk->btd", stacked, conv_w)
+        # carry-out: the window ending at the last VALID input
+        vc = jnp.clip(paged["lengths"][0] - paged["start"], 0, t)
+        new_conv = jax.lax.dynamic_slice_in_dim(xp, vc, ck - 1, axis=1)
+    elif cache is None or prefill:
         # causal depthwise conv over T: pad left ck-1
         xp = jnp.pad(x32, ((0, 0), (ck - 1, 0), (0, 0)))
         stacked = jnp.stack(
@@ -123,7 +150,20 @@ def mamba_apply(
     dt = jax.nn.softplus(dt + p["dt_bias"][None, None])
     a = -jnp.exp(p["a_log"])                               # (Di,N)
 
-    if cache is None or prefill:
+    if chunk:
+        # padded tail positions: dt=0 ⇒ abar=1, bx=0 — identity steps,
+        # so the carry-out equals the state at the last valid token
+        dt = jnp.where(valid[..., None], dt, 0.0)
+        y, last_state = _mamba_ssm_scan(
+            dt, xc, b, c, a, init=ssm0.astype(jnp.float32))
+        new_cache = dict(cache)
+        new_cache["conv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["conv"], new_conv.astype(cache["conv"].dtype),
+            slot, axis=0)
+        new_cache["ssm"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["ssm"], last_state.astype(cache["ssm"].dtype),
+            slot, axis=0)
+    elif cache is None or prefill:
         y, last_state = _mamba_ssm_scan(dt, xc, b, c, a)
         new_cache = None
         if prefill:
@@ -134,7 +174,17 @@ def mamba_apply(
         bx = (dt[:, 0] * xc[:, 0])[..., None] * b[:, 0, None, :]
         ssm = abar * cache["ssm"].astype(jnp.float32) + bx  # (B,Di,N)
         y = jnp.einsum("bdn,bn->bd", ssm, c[:, 0])[:, None, :]
-        new_cache = {"conv": new_conv, "ssm": ssm.astype(cache["ssm"].dtype)}
+        new_conv = new_conv.astype(cache["conv"].dtype)
+        ssm = ssm.astype(cache["ssm"].dtype)
+        if paged is not None:
+            # continuous batching: pos (B,) marks live decode slots;
+            # idle/prefilling slots keep their state untouched (pages
+            # get this for free via the scrap page — state rows can't)
+            act = pos >= 0
+            new_conv = jnp.where(act[:, None, None], new_conv,
+                                 cache["conv"])
+            ssm = jnp.where(act[:, None, None], ssm, cache["ssm"])
+        new_cache = {"conv": new_conv, "ssm": ssm}
 
     y = y + p["d"].astype(jnp.float32)[None, None] * xc
     y = y * jax.nn.silu(z.astype(jnp.float32))
@@ -161,10 +211,11 @@ MLSTM_CHUNK_THRESHOLD = 8192
 MLSTM_CHUNK = 1024
 
 
-def _mlstm_chunkwise(q, k, v, logi, logf, chunk):
+def _mlstm_chunkwise(q, k, v, logi, logf, chunk, init=None):
     """Chunkwise-parallel stabilized mLSTM.
 
     q (pre-scaled), k, v: (B, T, NH, hd) f32; logi, logf: (B, T, NH).
+    ``init``: carry-in (c0, n0, m0) — fresh zero state when None.
     Returns h: (B, T, NH, hd) f32.  Matches the quadratic parallel form
     (tested) at O(T·chunk) memory.
     """
@@ -198,10 +249,10 @@ def _mlstm_chunkwise(q, k, v, logi, logf, chunk):
         num = (jnp.einsum("btsh,bshd->bthd", scores, vc)
                + w_inter[..., None]
                * jnp.einsum("bhde,bthd->bthe", c0, qc))
-        l = (jnp.sum(scores, axis=2)
-             + w_inter * jnp.einsum("bhd,bthd->bth", n0, qc))
+        lsum = (jnp.sum(scores, axis=2)
+                + w_inter * jnp.einsum("bhd,bthd->bth", n0, qc))
         h = num / jnp.maximum(
-            jnp.abs(l), jnp.exp(-msafe))[..., None]
+            jnp.abs(lsum), jnp.exp(-msafe))[..., None]
         # inter-chunk state update (decay the carry by the whole chunk,
         # absorb this chunk's keys at their remaining decay)
         f_all = fcum[:, -1, :]                          # (b,nh)
@@ -214,11 +265,11 @@ def _mlstm_chunkwise(q, k, v, logi, logf, chunk):
         n1 = decay[..., None] * n0 + jnp.einsum("bch,bchd->bhd", wts, kc)
         return (c1, n1, m1), h
 
-    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
-    n0 = jnp.zeros((b, nh, hd), jnp.float32)
-    m0 = jnp.full((b, nh), -1e30, jnp.float32)
-    final, hs = jax.lax.scan(body, (c0, n0, m0),
-                             (qs, ks, vs, lis, lfs))
+    if init is None:
+        init = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+                jnp.zeros((b, nh, hd), jnp.float32),
+                jnp.full((b, nh), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(body, init, (qs, ks, vs, lis, lfs))
     return jnp.moveaxis(hs, 0, 1).reshape(b, t, nh, hd), final
 
 
@@ -250,9 +301,15 @@ def mlstm_apply(
     cache: Optional[Params] = None,
     pos=None,
     prefix: str = "mlstm.",
+    paged: Optional[Params] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Stabilized mLSTM. cache = {"c": (B,NH,hd,hd), "n": (B,NH,hd),
-    "m": (B,NH)} for decode."""
+    "m": (B,NH)} for decode.
+
+    Chunked prefill (``paged`` given, T>1): one chunkwise-parallel step
+    over the chunk seeded with slot ``paged["slot"]``'s pooled carry;
+    padded tail positions contribute nothing (input gate masked to
+    exp(-inf)=0, forget gate to log 1 = 0)."""
     d = cfg.d_model
     di = cfg.mlstm_proj * d
     nh = cfg.num_heads
@@ -269,7 +326,26 @@ def mlstm_apply(
     logi = h32 @ p["wi"] + p["bi"]                          # (B,T,NH)
     logf = jax.nn.log_sigmoid(h32 @ p["wf"] + p["bf"])      # (B,T,NH)
 
-    if cache is None or t > 1:
+    if cache is not None and t > 1 and paged is not None:
+        slot = paged["slot"]
+        c0 = jax.lax.dynamic_slice_in_dim(cache["c"], slot, 1, axis=0)
+        n0 = jax.lax.dynamic_slice_in_dim(cache["n"], slot, 1, axis=0)
+        m0 = jax.lax.dynamic_slice_in_dim(cache["m"], slot, 1, axis=0)
+        tpos = paged["start"] + jnp.arange(t, dtype=jnp.int32)
+        valid = (tpos < paged["lengths"][0])[None, :, None]  # (1,T,1)
+        logi = jnp.where(valid, logi, -jnp.inf)
+        logf = jnp.where(valid, logf, 0.0)
+        y, (c1, n1, m1) = _mlstm_chunkwise(
+            q, k, v, logi, logf, t,
+            init=(c0.astype(jnp.float32), n0.astype(jnp.float32), m0))
+        new_cache = dict(cache)
+        new_cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c1.astype(cache["c"].dtype), slot, axis=0)
+        new_cache["n"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["n"], n1.astype(cache["n"].dtype), slot, axis=0)
+        new_cache["m"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["m"], m1, slot, axis=0)
+    elif cache is None or t > 1:
         chunked = t > MLSTM_CHUNK_THRESHOLD and t % MLSTM_CHUNK == 0
         if chunked:
             from repro.models.layers import SEQ_PAR_ATTN, _dp_only_constrain
@@ -327,8 +403,15 @@ def mlstm_apply(
         den = jnp.maximum(
             jnp.abs(jnp.einsum("bhd,bhd->bh", n1, q1)), jnp.exp(-m1))
         y = (num / den[..., None])[:, None]                 # (B,1,NH,hd)
-        new_cache = {"c": c1.astype(cache["c"].dtype),
-                     "n": n1.astype(cache["n"].dtype), "m": m1}
+        c1 = c1.astype(cache["c"].dtype)
+        n1 = n1.astype(cache["n"].dtype)
+        if paged is not None:
+            # continuous batching: freeze idle slot rows (pos < 0)
+            act = pos >= 0
+            c1 = jnp.where(act[:, None, None, None], c1, cache["c"])
+            n1 = jnp.where(act[:, None, None], n1, cache["n"])
+            m1 = jnp.where(act[:, None], m1, cache["m"])
+        new_cache = {"c": c1, "n": n1, "m": m1}
 
     y = y.reshape(bsz, t, di).astype(h.dtype)
     out = linear(y, p["wo"], caps=caps, name=f"{prefix}wo")
@@ -408,9 +491,15 @@ def slstm_apply(
     cache: Optional[Params] = None,
     pos=None,
     prefix: str = "slstm.",
+    paged: Optional[Params] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Sequential sLSTM over T (lax.scan); decode consumes/updates cache
-    {"c","n","h","m"} each (B, D) f32."""
+    {"c","n","h","m"} each (B, D) f32.
+
+    Chunked prefill (``paged`` given, T>1): the scan carries on from
+    slot ``paged["slot"]``'s pooled state; padded tail steps keep the
+    state unchanged (per-step where-select), so the carry-out is the
+    state at the last valid token."""
     d = cfg.d_model
     nh = cfg.num_heads
     hd = d // nh
@@ -422,7 +511,30 @@ def slstm_apply(
     ox = linear(h_in, p["wo_gate"], caps=caps,
                 name=f"{prefix}wo_gate").astype(jnp.float32)
 
-    if cache is None or t > 1:
+    if cache is not None and t > 1 and paged is not None:
+        slot = paged["slot"]
+        state = tuple(
+            jax.lax.dynamic_slice_in_dim(cache[k_], slot, 1, axis=0)
+            for k_ in "cnhm")
+        tpos = paged["start"] + jnp.arange(t, dtype=jnp.int32)
+        valid_t = tpos < paged["lengths"][0]                # (T,)
+
+        def step(state, xs):
+            *gates, ok = xs
+            st = _slstm_cell(p, *gates, state, nh, hd)
+            st = tuple(jnp.where(ok, n_, o_) for n_, o_ in zip(st, state))
+            return st, st[2]
+
+        final, ys = jax.lax.scan(
+            step, state,
+            (zx.swapaxes(0, 1), ix.swapaxes(0, 1),
+             fx.swapaxes(0, 1), ox.swapaxes(0, 1), valid_t))
+        y = ys.swapaxes(0, 1)                               # (B,T,D)
+        new_cache = dict(cache)
+        for i, k_ in enumerate("cnhm"):
+            new_cache[k_] = jax.lax.dynamic_update_slice_in_dim(
+                cache[k_], final[i].astype(cache[k_].dtype), slot, axis=0)
+    elif cache is None or t > 1:
         if cache is None:
             state = tuple(
                 jnp.zeros((bsz, d), jnp.float32) if i != 3
@@ -448,6 +560,10 @@ def slstm_apply(
         st = _slstm_cell(p, zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0],
                          state, nh, hd)
         y = st[2][:, None]
+        if paged is not None:
+            # continuous batching: freeze idle slot rows (pos < 0)
+            act = (pos >= 0)[:, None]
+            st = tuple(jnp.where(act, n_, o_) for n_, o_ in zip(st, state))
         new_cache = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
 
     out = linear(y.astype(h.dtype), p["wo"], caps=caps, name=f"{prefix}wo")

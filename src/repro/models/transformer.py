@@ -18,17 +18,17 @@ Entry points:
   init_cache(batch, max_len)            decode cache pytree
   prefill(params, batch, cache)         prompt → logits, filled cache
   decode_step(params, token, cache, pos)   one-token serve_step
-  init_paged_cache / prefill_paged /    paged-KV twin of the decode path
-    decode_step(..., paged=...)           (continuous batching, serve/)
+  init_paged_cache / prefill_paged /    paged twin of the decode path
+    prefill_chunk / decode_step(...,      (continuous batching, serve/ —
+    paged=...)                            KV pages + slot-pooled state)
   prunable_segments() / first_hidden()  core.engine contract
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,8 +107,8 @@ def block_apply(
     """Apply one block (mixer + optional FFN). Returns (h, cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     np_ = name_prefix
-    if paged is not None and kind not in ("attn", "attn_local"):
-        raise ValueError(f"paged decode supports attention mixers only, "
+    if paged is not None and kind in ("enc_attn", "dec_attn"):
+        raise ValueError(f"paged decode supports decoder-only mixers, "
                          f"got {kind!r}")
     if kind in ("attn", "attn_local", "enc_attn"):
         h, cache = attn_apply(
@@ -139,15 +139,15 @@ def block_apply(
     elif kind == "mamba":
         h, cache = ssm_lib.mamba_apply(
             p["mamba"], h, cfg, caps=caps, cache=cache, pos=pos,
-            prefix=f"{np_}mamba.")
+            prefix=f"{np_}mamba.", paged=paged)
     elif kind == "mlstm":
         h, cache = ssm_lib.mlstm_apply(
             p["mlstm"], h, cfg, caps=caps, cache=cache, pos=pos,
-            prefix=f"{np_}mlstm.")
+            prefix=f"{np_}mlstm.", paged=paged)
     elif kind == "slstm":
         h, cache = ssm_lib.slstm_apply(
             p["slstm"], h, cfg, caps=caps, cache=cache, pos=pos,
-            prefix=f"{np_}slstm.")
+            prefix=f"{np_}slstm.", paged=paged)
     else:
         raise ValueError(f"unknown block kind {kind!r}")
 
@@ -394,38 +394,54 @@ class LM:
         return jax.eval_shape(
             functools.partial(self.init_cache, batch, max_len, dtype))
 
+    # block kinds whose paged serve cache is slot-pooled recurrent state
+    STATE_KINDS = ("mamba", "mlstm", "slstm")
+
     def init_paged_cache(self, num_pages: int, page_size: int,
-                         dtype=None) -> Params:
-        """Paged KV pool for the continuous-batching serve runtime: the
-        same tree layout as :meth:`init_cache` but each attention leaf is
-        a global (num_pages, page_size, KV, hd) page pool shared by all
-        requests via per-request block tables (serve.kvpool owns the
-        allocator; page 0 is the scrap page).  Only attention mixers
-        page; recurrent-state archs keep dense per-slot caches."""
+                         dtype=None, max_slots: Optional[int] = None
+                         ) -> Params:
+        """Paged serve cache for the continuous-batching runtime: the
+        same tree layout as :meth:`init_cache` but each attention leaf
+        is a global (num_pages, page_size, KV, hd) page pool shared by
+        all requests via per-request block tables (serve.kvpool owns
+        the allocator; page 0 is the scrap page), and each recurrent
+        mixer leaf is a slot-recycled fixed-state pool — the dense
+        cache with batch = ``max_slots``, one row per serve slot
+        (serve.kvpool.StatePool resets rows at admission)."""
         cfg = self.cfg
         dt = dtype or self.dtype
-        bad = [k for k in (*cfg.prefix, *cfg.period)
-               if k not in ("attn", "attn_local")]
+        kinds = (*cfg.prefix, *cfg.period)
+        bad = [k for k in kinds
+               if k not in ("attn", "attn_local", *self.STATE_KINDS)]
         if bad or cfg.encdec or cfg.frontend is not None:
             # frontends excluded too: the paged decode branch carries no
             # prefix_len, so a bidirectional image prefix would be
             # silently masked out of windowed layers
             raise ValueError(
-                f"{cfg.name}: paged decode supports plain attention "
-                f"decoders only (got {bad or ['encdec/frontend']})")
+                f"{cfg.name}: paged decode supports plain decoder archs "
+                f"only (got {bad or ['encdec/frontend']})")
+        if max_slots is None and any(k in self.STATE_KINDS for k in kinds):
+            raise ValueError(
+                f"{cfg.name}: recurrent-state mixers need max_slots for "
+                f"the slot-pooled state (serve.kvpool.StatePool)")
+
+        def block_paged_init(kind):
+            if kind in ("attn", "attn_local"):
+                return attn_paged_cache_init(cfg, num_pages, page_size, dt)
+            return block_cache_init(cfg, kind, max_slots, 0, dt)
+
         cache: Params = {}
         if cfg.prefix:
             cache["prefix"] = {
-                str(i): attn_paged_cache_init(cfg, num_pages, page_size, dt)
-                for i in range(len(cfg.prefix))
+                str(i): block_paged_init(kind)
+                for i, kind in enumerate(cfg.prefix)
             }
         if cfg.n_periods:
             cache["layers"] = {
                 f"s{j}": jax.vmap(
-                    lambda _: attn_paged_cache_init(
-                        cfg, num_pages, page_size, dt)
+                    lambda _, kind=kind: block_paged_init(kind)
                 )(jnp.arange(cfg.n_periods))
-                for j in range(len(cfg.period))
+                for j, kind in enumerate(cfg.period)
             }
         return cache
 
@@ -435,6 +451,7 @@ class LM:
         di = cfg.mlstm_proj * cfg.d_model
         return {"num_kv_heads": cfg.num_kv_heads, "hd": cfg.hd,
                 "d_inner": cfg.d_inner, "d_model": cfg.d_model,
+                "num_heads": cfg.num_heads,
                 "mlstm_hd": di // cfg.num_heads}
 
     def _assemble_cache_specs(self, block_specs) -> Dict[str, Any]:
@@ -472,18 +489,28 @@ class LM:
                 prefer_seq=prefer_seq))
 
     def paged_cache_specs(self, mesh, tp_axis: str = "model"):
-        """PartitionSpec pytree for the paged KV pool
-        (:meth:`init_paged_cache`): pages replicated over the data axes,
-        KV heads over the model axis when they divide it — deliberately
-        NO head_dim fallback (it would break paged/dense decode
-        bit-parity); the rules live in
-        :func:`repro.dist.sharding.paged_kv_block_specs`."""
-        from repro.dist.sharding import paged_kv_block_specs
+        """PartitionSpec pytree for the paged serve cache
+        (:meth:`init_paged_cache`): attention pages replicated over the
+        data axes, KV heads over the model axis when they divide it —
+        deliberately NO head_dim fallback (it would break paged/dense
+        decode bit-parity); recurrent-state slot pools replicate the
+        slot dim and shard the width dim over ``model`` only when the
+        split is head-aligned.  The rules live in
+        :func:`repro.dist.sharding.paged_kv_block_specs` /
+        :func:`repro.dist.sharding.paged_state_block_specs`."""
+        from repro.dist.sharding import (paged_kv_block_specs,
+                                         paged_state_block_specs)
 
         dims = self._cache_dims()
-        return self._assemble_cache_specs(
-            lambda kind, lead: paged_kv_block_specs(
-                dims, mesh, extra_lead=lead, tp_axis=tp_axis))
+
+        def block_specs(kind, lead):
+            if kind in self.STATE_KINDS:
+                return paged_state_block_specs(
+                    kind, dims, mesh, extra_lead=lead, tp_axis=tp_axis)
+            return paged_kv_block_specs(
+                dims, mesh, extra_lead=lead, tp_axis=tp_axis)
+
+        return self._assemble_cache_specs(block_specs)
 
     def prefill(self, params: Params, batch, cache: Params
                 ) -> Tuple[jax.Array, Params]:
@@ -586,6 +613,63 @@ class LM:
                                h_last, cfg)
         return logits[:, 0, :].astype(jnp.float32), cache
 
+    def prefill_chunk(self, params: Params, batch, cache: Params,
+                      start, length, slot, block_tables, *,
+                      page_size: int) -> Tuple[jax.Array, Params]:
+        """One fixed-size chunk of ONE request's prompt (continuous
+        batching — the chunked paged prefill, docs/serving.md).
+
+        batch["tokens"]: (1, C) — tokens ``start .. start+C`` of the
+        request's prompt, zero-padded past ``length``; ``start`` /
+        ``length`` / ``slot``: scalar int32 (chunk offset, full prompt
+        length, the request's serve slot); block_tables: (1, P_max).
+        Attention layers scatter the chunk's K/V into the pages and
+        attend over the gathered slot context; recurrent mixers carry
+        slot ``slot``'s pooled state forward.  Every chunk of every
+        prompt shares this one jitted shape.  Returns (logits at
+        position ``min(length, start+C) - 1`` — the sampling logits
+        when this is the final chunk, garbage otherwise — (1, V) f32,
+        updated cache)."""
+        cfg = self.cfg
+        assert not cfg.encdec and cfg.frontend is None, \
+            "chunked prefill: plain decoder archs"
+        h = self.first_hidden(params, batch)
+        t = h.shape[1]
+        paged = {"block_tables": block_tables,
+                 "lengths": jnp.reshape(length, (1,)),
+                 "start": start, "slot": slot}
+        cache = dict(cache)
+
+        if cfg.prefix:
+            newp = {}
+            for i, kind in enumerate(cfg.prefix):
+                h, c, _ = block_apply(
+                    cfg, kind, params["prefix"][str(i)], h,
+                    cache=cache["prefix"][str(i)], paged=paged,
+                    page_size=page_size)
+                newp[str(i)] = c
+            cache["prefix"] = newp
+
+        if cfg.n_periods:
+            def body(h, xs):
+                pj, cj = xs
+                new_c = {}
+                for j, kind in enumerate(cfg.period):
+                    h, c, _ = block_apply(
+                        cfg, kind, pj[f"s{j}"], h, cache=cj[f"s{j}"],
+                        paged=paged, page_size=page_size)
+                    new_c[f"s{j}"] = c
+                return h, new_c
+            h, new_layers = self._scan_or_unroll(
+                body, h, params["layers"], cache["layers"])
+            cache["layers"] = new_layers
+
+        idx = jnp.clip(length - 1 - start, 0, t - 1)
+        h_last = jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+        logits = unembed_apply(params["unembed"], params["embed"],
+                               h_last, cfg)
+        return logits[:, 0, :].astype(jnp.float32), cache
+
     def decode_step(self, params: Params, token: jax.Array, cache: Params,
                     pos, paged: Optional[Params] = None,
                     page_size: Optional[int] = None
@@ -594,9 +678,12 @@ class LM:
         absolute position being written). Returns (logits (B,V), cache).
 
         Paged mode (``paged={"block_tables": (B, P_max)}`` + static
-        ``page_size``): ``cache`` is the page pool from
+        ``page_size``): ``cache`` is the paged serve cache from
         :meth:`init_paged_cache` and ``pos`` is a per-request (B,) vector
-        of write positions, -1 marking idle slots."""
+        of write positions, -1 marking idle slots.  Attention layers go
+        through the block tables; recurrent mixers advance their slot
+        row exactly as in dense decode (slot index == batch row — the
+        pooled state IS the dense cache with batch = max_slots)."""
         cfg = self.cfg
         h = embed_apply(params["embed"], token[:, None], cfg)
         pl = self._prefix_len(None)

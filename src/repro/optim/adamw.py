@@ -36,7 +36,10 @@ class AdamW:
     # ------------------------------------------------------------------
     def init(self, params: Any) -> OptState:
         mdt = jnp.dtype(self.moment_dtype)
-        zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+        def zeros(p):
+            return jnp.zeros(p.shape, mdt)
+
         return OptState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params),

@@ -1,15 +1,19 @@
-"""Serving: continuous-batching paged-KV runtime + 2:4-sparse weights.
+"""Serving: continuous-batching paged runtime + 2:4-sparse weights.
 
   engine     ServeEngine — continuous batching (static-bucket escape
-             hatch), greedy/temperature sampling, mesh-resident params
+             hatch), chunked paged prefill, greedy/temperature/top-k/
+             top-p sampling, mesh-resident params
   kvpool     PagedKVPool — fixed-size KV pages, free-list allocator,
-             per-request block tables (dist-sharded pool)
-  scheduler  Scheduler — join-at-prefill / retire-at-EOS / preemption
+             per-request block tables (dist-sharded pool);
+             StatePool — slot-recycled recurrent-state pool for
+             Mamba/xLSTM/hybrid mixers
+  scheduler  Scheduler — join-at-prefill / chunked prefill / retire-at-
+             EOS / preemption
   sparse     2:4 weight packing → kernels.nm_spmm serve path
 """
 
 from repro.serve.engine import ServeEngine, Request, Result
-from repro.serve.kvpool import PagedKVPool
+from repro.serve.kvpool import PagedKVPool, StatePool
 from repro.serve.scheduler import Scheduler, Sequence, SeqState
 from repro.serve.sparse import sparsify_params, DEFAULT_SPARSE_PATTERNS
 
@@ -18,6 +22,7 @@ __all__ = [
     "Request",
     "Result",
     "PagedKVPool",
+    "StatePool",
     "Scheduler",
     "Sequence",
     "SeqState",

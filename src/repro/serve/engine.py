@@ -1,10 +1,14 @@
-"""Serving engine: continuous batching over a paged KV pool.
+"""Serving engine: continuous batching over a paged serve cache.
 
 Default mode ``"continuous"`` (docs/serving.md) runs a step loop over
 serve.scheduler: requests join the running batch the moment a slot and
-prompt pages are free (one paged prefill each), every decode step
-advances *all* running requests one token against the shared page pool
-(kernels.paged_attn / its jnp oracle), and a request retiring at EOS or
+prompt pages are free, their prompts stream in as fixed-size token
+chunks (one jitted ``prefill_chunk`` shape, interleaved with everyone
+else's decode — no head-of-line blocking from long prompts), every
+decode step advances *all* running requests one token against the
+shared page pool (kernels.paged_attn / its jnp oracle) and the
+slot-recycled recurrent-state pool (Mamba/xLSTM/hybrid mixers,
+serve.kvpool.StatePool), and a request retiring at EOS or
 ``max_new_tokens`` returns its slot and pages the same step — no decode
 is ever burned into a scrap position.  When the pool runs dry the
 youngest request is preempted (recompute-style) and re-queued.
@@ -13,20 +17,23 @@ youngest request is preempted (recompute-style) and re-queued.
 pattern): requests bucketed by prompt length, one batched prefill + a
 decode loop per bucket, finished requests decoding into scrap until the
 whole bucket drains.  Archs the paged path can't serve (enc-dec,
-modality frontends, recurrent-state mixers) fall back to it
-automatically.
+modality frontends, MoE — expert-capacity dropping makes logits
+batch-dependent) fall back to it automatically.
 
 Both paths are greedy-token-identical: paged attention is bit-equal to
-the dense cache math (kernels.ref.paged_attn_ref), and sampling is keyed
-per (request uid, step) in continuous mode so results are independent of
-batch composition and survive preemption-recompute.
+the dense cache math (kernels.ref.paged_attn_ref), recurrent-state
+chunked prefill is the same recurrence with a different (tested)
+reduction tree, and sampling — greedy, temperature, top-k, top-p — is
+keyed per (request uid, step) in continuous mode so results are
+independent of batch composition and survive preemption-recompute.
 
 On a mesh — passed explicitly or resolved from the active ``repro.dist``
 context — params are sharded by dist.sharding rules (tensor-parallel
 resident, no FSDP: serving re-reads weights every step), the paged pool
-is placed by the paged cache rules (pages replicated over data, KV heads
-over ``model``), and static-bucket batches are placed over the data axes
-when they divide.  Without a mesh everything stays single-device.
+is placed by the paged cache rules (pages/slots replicated over data,
+widths over ``model`` on head-aligned splits), and static-bucket batches
+are placed over the data axes when they divide.  Without a mesh
+everything stays single-device.
 """
 
 from __future__ import annotations
@@ -41,6 +48,11 @@ import numpy as np
 
 from repro.models.transformer import LM
 
+# every mixer the paged runtime serves: attention (KV pages) plus the
+# recurrent kinds (slot-pooled state — the canonical list lives on LM,
+# which init_paged_cache validates against)
+PAGED_KINDS = ("attn", "attn_local", *LM.STATE_KINDS)
+
 
 @dataclasses.dataclass
 class Request:
@@ -54,8 +66,8 @@ class Result:
     uid: int
     tokens: np.ndarray                   # generated tokens (≤ max_new)
     prompt_len: int
-    decode_steps: int = 0                # sampling opportunities the
-    #                                      request's slot was live for
+    decode_steps: int = 0                # steps the request's slot was
+    #                                      live for (chunks + decodes)
     preemptions: int = 0                 # times recomputed (continuous)
 
     @property
@@ -63,7 +75,8 @@ class Result:
         """Emitted tokens / slot-steps occupied: 1.0 means every step
         the request held a slot produced a token; static bucketing
         drops it by whatever was burned into scrap positions (and
-        continuous preemption by the recomputed prefix)."""
+        continuous mode by multi-chunk prefills and the recomputed
+        prefix after a preemption)."""
         if self.decode_steps <= 0:
             return 0.0
         return len(self.tokens) / self.decode_steps
@@ -78,11 +91,14 @@ class ServeEngine:
         max_len: int = 256,
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
+        top_k: Optional[int] = None,
+        top_p: Optional[float] = None,
         extra_batch: Optional[Dict[str, jax.Array]] = None,
         mesh=None,
         mode: str = "continuous",
         page_size: int = 16,
         num_pages: Optional[int] = None,
+        prefill_chunk: int = 32,
     ):
         from repro.dist import current_ctx, dp_axes_of, shard_params
 
@@ -112,6 +128,8 @@ class ServeEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
         self.extra_batch = extra_batch or {}
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
@@ -122,25 +140,29 @@ class ServeEngine:
         # parity and bit-exact preemption-recompute guarantees below
         paged_ok = (not cfg.encdec and cfg.frontend is None
                     and not self.extra_batch and cfg.moe is None
-                    and all(k in ("attn", "attn_local")
+                    and all(k in PAGED_KINDS
                             for k in (*cfg.prefix, *cfg.period)))
         self.mode = mode if paged_ok else "static"
         self.pool = None
+        self.state_pool = None
         if self.mode == "continuous":
-            from repro.serve.kvpool import PagedKVPool
+            from repro.serve.kvpool import PagedKVPool, StatePool
 
             self.page_size = page_size
+            self.chunk_size = prefill_chunk
             if num_pages is None:
                 # same token capacity as the dense static cache, + scrap
                 num_pages = max_batch * (-(-max_len // page_size)) + 1
             self.pool = PagedKVPool(
                 model, num_pages=num_pages, page_size=page_size,
                 max_slots=max_batch, max_len=max_len, mesh=mesh)
+            state = StatePool(model, max_slots=max_batch)
+            self.state_pool = state if state.has_state else None
             self._decode_paged = jax.jit(
                 functools.partial(model.decode_step, page_size=page_size),
                 donate_argnums=(2,))
-            self._prefill_paged = jax.jit(
-                functools.partial(model.prefill_paged, page_size=page_size),
+            self._prefill_chunk = jax.jit(
+                functools.partial(model.prefill_chunk, page_size=page_size),
                 donate_argnums=(2,))
 
     def _place_batch(self, batch: Dict[str, jax.Array]
@@ -155,11 +177,33 @@ class ServeEngine:
                 for k, v in batch.items()}
 
     # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _filter_logits(self, row: jax.Array) -> jax.Array:
+        """Top-k / top-p (nucleus) filtering of one temperature-scaled
+        logit row: filtered-out entries go to -inf.  Pure per-row — the
+        batched (vmapped) and solo paths run the identical ops, which is
+        what keeps the per-(uid, step) streams batch-independent."""
+        v = row.shape[-1]
+        if self.top_k is not None and 0 < self.top_k < v:
+            kth = jax.lax.top_k(row, self.top_k)[0][-1]
+            row = jnp.where(row < kth, -jnp.inf, row)
+        if self.top_p is not None and 0.0 < self.top_p < 1.0:
+            srt = jnp.sort(row)[::-1]                     # descending
+            probs = jax.nn.softmax(srt)
+            # keep the smallest prefix whose mass reaches top_p (the
+            # first token always survives: exclusive cumsum < p)
+            keep = (jnp.cumsum(probs) - probs) < self.top_p
+            thr = jnp.min(jnp.where(keep, srt, jnp.inf))
+            row = jnp.where(row < thr, -jnp.inf, row)
+        return row
+
     def _sample(self, logits: jax.Array, key) -> jax.Array:
+        """Static-mode sampling: one batch-keyed draw per step."""
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.temperature).astype(jnp.int32)
+        rows = jax.vmap(self._filter_logits)(logits / self.temperature)
+        return jax.random.categorical(key, rows).astype(jnp.int32)
 
     def _pos_offset(self) -> int:
         cfg = self.model.cfg
@@ -219,20 +263,21 @@ class ServeEngine:
     # continuous batching
     # ------------------------------------------------------------------
     def _sample_seq(self, logits_row: jax.Array, seq, base_key) -> int:
-        """Sample one token for one sequence. Temperature sampling is
-        keyed per (uid, step): independent of batch composition, and a
-        preempted request's recompute replays the identical stream."""
+        """Sample one token for one sequence.  Sampling is keyed per
+        (uid, step): independent of batch composition, and a preempted
+        request's recompute replays the identical stream."""
         if self.temperature <= 0.0:
             return int(jnp.argmax(logits_row))
         key = jax.random.fold_in(
             jax.random.fold_in(base_key, seq.req.uid), len(seq.tokens))
-        return int(jax.random.categorical(
-            key, logits_row / self.temperature))
+        row = self._filter_logits(logits_row / self.temperature)
+        return int(jax.random.categorical(key, row))
 
     def _sample_running(self, logits, running, base_key) -> np.ndarray:
         """One batched sample for every running slot (single device
-        round-trip per step).  The vmapped per-row (uid, step) keys draw
-        the same stream as :meth:`_sample_seq` row by row."""
+        round-trip per step).  The vmapped per-row (uid, step) keys and
+        per-row top-k/p filter draw the same stream as
+        :meth:`_sample_seq` row by row."""
         if self.temperature <= 0.0:
             return np.asarray(jax.device_get(
                 jnp.argmax(logits, axis=-1).astype(jnp.int32)))[
@@ -243,7 +288,8 @@ class ServeEngine:
 
         def draw(uid, step, row):
             key = jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
-            return jax.random.categorical(key, row / self.temperature)
+            return jax.random.categorical(
+                key, self._filter_logits(row / self.temperature))
 
         return np.asarray(jax.device_get(
             jax.vmap(draw)(uids, steps, rows).astype(jnp.int32)))
@@ -254,6 +300,31 @@ class ServeEngine:
                 or (self.eos_id is not None and tok == self.eos_id))
         if done:
             sched.finish(seq)
+
+    def _run_prefill_chunk(self, seq, sched, base_key) -> None:
+        """Feed one fixed-size prompt chunk of the oldest prefilling
+        request; the final chunk samples the first token and moves the
+        request to decode."""
+        from repro.serve.scheduler import SeqState
+
+        pool = self.pool
+        plen = len(seq.req.prompt)
+        start = seq.n_prefilled
+        chunk = np.zeros((1, self.chunk_size), np.int32)
+        piece = seq.req.prompt[start:start + self.chunk_size]
+        chunk[0, :len(piece)] = piece
+        bt = jnp.asarray(pool.block_tables[seq.slot][None])
+        logits, pool.kv = self._prefill_chunk(
+            self.params, {"tokens": jnp.asarray(chunk)}, pool.kv,
+            jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32),
+            jnp.asarray(seq.slot, jnp.int32), bt)
+        seq.n_prefilled = min(start + self.chunk_size, plen)
+        seq.occupied_steps += 1
+        if seq.n_prefilled >= plen:       # final chunk → first token
+            seq.n_written = plen
+            seq.state = SeqState.RUNNING
+            self._record(seq, self._sample_seq(logits[0], seq, base_key),
+                         sched)
 
     def _generate_continuous(self, requests: Sequence[Request], seed: int
                              ) -> List[Result]:
@@ -268,34 +339,31 @@ class ServeEngine:
                 raise ValueError(f"request {r.uid} exceeds max_len")
             seqs.append(sched.submit(r))
         base_key = jax.random.key(seed)
-        ps = self.page_size
 
         while sched.has_work():
             # 1) join-at-prefill: new requests take free slots/pages now
+            #    (recurrent-state slot rows reset to the init state —
+            #    stale state can't mask by length like pages do)
             for seq in sched.admit():
                 if seq.req.max_new_tokens <= 0:   # nothing to emit
                     sched.finish(seq)
                     continue
-                plen = len(seq.req.prompt)
-                tpad = -(-plen // ps) * ps
-                toks = np.zeros((1, tpad), np.int32)
-                toks[0, :plen] = seq.req.prompt
-                bt = jnp.asarray(pool.block_tables[seq.slot][None])
-                logits, pool.kv = self._prefill_paged(
-                    self.params, {"tokens": jnp.asarray(toks)}, pool.kv,
-                    lengths=jnp.asarray([plen], jnp.int32), block_tables=bt)
-                seq.n_written = plen
-                seq.occupied_steps += 1
-                self._record(seq, self._sample_seq(logits[0], seq, base_key),
-                             sched)
-            if not sched.running:
-                continue
-            # 2) extend block tables for this step's writes (may preempt)
-            sched.ensure_decode_capacity()
-            running = list(sched.running)
+                if self.state_pool is not None:
+                    pool.kv = self.state_pool.reset_slot(pool.kv, seq.slot)
+            # 2) one prompt chunk for the oldest prefilling request,
+            #    interleaved with this step's decode
+            seq = sched.next_prefill()
+            if seq is not None:
+                self._run_prefill_chunk(seq, sched, base_key)
+            running = sched.decoding()
             if not running:
                 continue
-            # 3) one decode step over every running slot
+            # 3) extend block tables for this step's writes (may preempt)
+            sched.ensure_decode_capacity()
+            running = sched.decoding()
+            if not running:
+                continue
+            # 4) one decode step over every decoding slot
             tok = np.zeros((self.max_batch,), np.int32)
             pos = np.full((self.max_batch,), -1, np.int32)
             for seq in running:
@@ -305,7 +373,7 @@ class ServeEngine:
                 self.params, jnp.asarray(tok), pool.kv, jnp.asarray(pos),
                 paged={"block_tables": pool.tables_device()})
             sampled = self._sample_running(logits, running, base_key)
-            # 4) advance / retire
+            # 5) advance / retire
             for i, seq in enumerate(running):
                 seq.n_written += 1
                 seq.occupied_steps += 1

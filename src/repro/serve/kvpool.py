@@ -1,28 +1,36 @@
-"""Paged KV-cache pool: fixed-size pages + per-slot block tables.
+"""Paged serve cache: KV pages + slot-recycled recurrent-state pool.
 
 The continuous-batching serve runtime (docs/serving.md) stores every
-request's KV cache in fixed-size pages drawn from one global pool — a
-pytree of (num_pages, page_size, KV, hd) arrays mirroring the model's
-block layout (``LM.init_paged_cache``).  A request owns a *block table*
-row mapping its logical token positions to physical page ids; pages are
-recycled through a host-side free list the moment a request retires or
-is preempted, so cache capacity tracks *live tokens* instead of
-``max_batch × max_len``.
+request's attention KV cache in fixed-size pages drawn from one global
+pool — a pytree of (num_pages, page_size, KV, hd) arrays mirroring the
+model's block layout (``LM.init_paged_cache``).  A request owns a
+*block table* row mapping its logical token positions to physical page
+ids; pages are recycled through a host-side free list the moment a
+request retires or is preempted, so cache capacity tracks *live tokens*
+instead of ``max_batch × max_len``.
 
 Page 0 is the reserved **scrap page**: never allocated, it absorbs the
 writes of padded prefill positions and idle decode slots (attention
 masks by length, so scrap contents are never read).
 
-On a mesh the pool arrays are placed by the ``dist.sharding`` rules
-(:func:`repro.dist.sharding.paged_kv_block_specs` via
-``LM.paged_cache_specs``): pages replicated over the data axes, KV heads
-over ``model`` when they divide it (deliberately no head_dim fallback —
-see the rules function) — closing the ROADMAP cache-sharding item.
+Recurrent mixers (mamba/mlstm/slstm) carry O(1) per-request state, not
+per-token KV — their leaves in the same cache tree form a
+**slot-recycled fixed-state pool** (:class:`StatePool`): the dense
+cache with batch = max_slots, one row per serve slot.  Pages mask
+stale contents by length; state rows cannot, so :class:`StatePool`
+overwrites a slot's rows with the block's init state at admission.
+
+On a mesh the cache is placed by the ``dist.sharding`` rules
+(:func:`repro.dist.sharding.paged_kv_block_specs` /
+:func:`~repro.dist.sharding.paged_state_block_specs` via
+``LM.paged_cache_specs``): page/slot dims replicated over the data axes,
+widths over ``model`` only on head-aligned splits (deliberately no
+sub-head fallback — see the rules functions).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +64,13 @@ class PagedKVPool:
         self.num_pages = num_pages
         self.max_slots = max_slots
         self.pages_per_slot = -(-max_len // page_size)
-        self.kv = model.init_paged_cache(num_pages, page_size, dtype)
+        cfg = model.cfg
+        # pure recurrent-state archs have no KV pages: prompts cost 0
+        # pages and decode never extends a block table
+        self.has_kv_pages = any(
+            k in ("attn", "attn_local") for k in (*cfg.prefix, *cfg.period))
+        self.kv = model.init_paged_cache(num_pages, page_size, dtype,
+                                         max_slots=max_slots)
         if mesh is not None:
             from repro.dist import named_shardings
 
@@ -77,6 +91,13 @@ class PagedKVPool:
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages backing ``n_tokens`` KV entries — 0 for pure
+        recurrent-state archs (no attention layers, nothing to page)."""
+        if not self.has_kv_pages:
+            return 0
+        return -(-n_tokens // self.page_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` pages off the free list; None if it would overdraw
@@ -130,3 +151,78 @@ class PagedKVPool:
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.block_tables)
         return self._tables_dev
+
+
+class StatePool:
+    """Slot-recycled fixed-state pool for recurrent mixers.
+
+    Mamba/xLSTM blocks carry O(1) per-request state instead of per-token
+    KV, so their continuous-batching cache is simply the dense decode
+    cache with batch = ``max_slots`` — slot index == batch row, and
+    ``LM.decode_step(paged=...)`` advances every row exactly as dense
+    decode does.  What pages get from masking-by-length, state rows need
+    explicitly: a retired request's rows would leak into the next
+    occupant of the slot, so :meth:`reset_slot` overwrites them with the
+    block's init state at admission (join-at-prefill; recompute
+    preemption re-admits through the same reset, which is what makes the
+    replayed prefix bit-exact).
+
+    The device arrays live in the engine's shared cache tree
+    (``PagedKVPool.kv``) — this class only knows *where* the state
+    leaves sit in that tree and what a fresh row looks like.  The
+    recurrent-kind list is ``LM.STATE_KINDS`` (the one
+    ``init_paged_cache`` validates against) — a kind missing here
+    would silently skip the admission reset and leak state between
+    requests, so there is deliberately no second copy.
+    """
+
+    def __init__(self, model, *, max_slots: int, dtype=None):
+        from repro.models.transformer import block_cache_init
+
+        cfg = model.cfg
+        dt = dtype or model.dtype
+        self.max_slots = max_slots
+        state_kinds = model.STATE_KINDS
+        # (path into the cache tree, single-slot init rows, stacked?)
+        self.entries: List[Tuple[Tuple[str, ...], Dict[str, Any], bool]] = []
+        for i, kind in enumerate(cfg.prefix):
+            if kind in state_kinds:
+                self.entries.append((
+                    ("prefix", str(i)),
+                    block_cache_init(cfg, kind, 1, 0, dt), False))
+        for j, kind in enumerate(cfg.period):
+            if kind in state_kinds:
+                self.entries.append((
+                    ("layers", f"s{j}"),
+                    block_cache_init(cfg, kind, 1, 0, dt), True))
+
+    @property
+    def has_state(self) -> bool:
+        return bool(self.entries)
+
+    def reset_slot(self, cache, slot: int):
+        """Overwrite slot ``slot``'s state rows with the init state
+        (functional — returns the updated cache tree; attention page
+        leaves pass through untouched)."""
+        for path, rows, stacked in self.entries:
+            node = cache
+            for key in path[:-1]:
+                node = node[key]
+            block = node[path[-1]]
+            if stacked:     # (n_periods, max_slots, ...) — broadcast row
+                new = {k: v.at[:, slot].set(rows[k][0].astype(v.dtype))
+                       for k, v in block.items()}
+            else:
+                new = {k: v.at[slot].set(rows[k][0].astype(v.dtype))
+                       for k, v in block.items()}
+            cache = _tree_set(cache, path, new)
+        return cache
+
+
+def _tree_set(tree, path, value):
+    """Functionally replace ``tree[path[0]][path[1]]...`` with value."""
+    if not path:
+        return value
+    new = dict(tree)
+    new[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+    return new

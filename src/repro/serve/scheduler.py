@@ -2,19 +2,24 @@
 
 State machine per request (docs/serving.md):
 
-    WAITING --admit--> RUNNING --finish--> FINISHED
-       ^                  |
-       +----- preempt ----+        (pages released, recompute on re-admit)
+    WAITING --admit--> PREFILL --last chunk--> RUNNING --finish--> FINISHED
+       ^                  |                       |
+       +----------------- + ------ preempt ------+
+                 (pages released, recompute on re-admit)
 
 Every engine step the scheduler (1) **admits** waiting requests into
 free slots while the pool can back their prompts — join-at-prefill, so a
 retiring request's slot is refilled the very next step instead of
-burning decode into scrap positions; (2) **ensures decode capacity** —
-each running request about to cross a page boundary gets one more page,
-preempting the *youngest* running request (recompute-style: its pages
-and slot are released and it re-queues at the front) when the pool is
-exhausted; (3) **retires** requests at EOS / ``max_new_tokens``,
-recycling slot and pages immediately.
+burning decode into scrap positions; admitted requests enter PREFILL and
+the engine feeds their prompt through in fixed-size token *chunks*
+(one jitted shape), one chunk per step, interleaved with everyone else's
+decode — a long prompt can no longer head-of-line-block the running
+batch; (2) **ensures decode capacity** — each decoding request about to
+cross a page boundary gets one more page, preempting the *youngest*
+admitted request (recompute-style: its pages and slot are released and
+it re-queues at the front) when the pool is exhausted; (3) **retires**
+requests at EOS / ``max_new_tokens``, recycling slot and pages
+immediately.
 
 Sampling in the engine is keyed per (request uid, step), so a preempted
 request's recompute reproduces its original tokens exactly — preemption
@@ -26,13 +31,14 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, List
+from typing import Deque, List, Optional
 
 from repro.serve.kvpool import PagedKVPool
 
 
 class SeqState(enum.Enum):
     WAITING = "waiting"
+    PREFILL = "prefill"
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -44,9 +50,10 @@ class Sequence:
     req: "repro.serve.engine.Request"              # noqa: F821
     state: SeqState = SeqState.WAITING
     slot: int = -1
+    n_prefilled: int = 0        # prompt tokens already chunk-prefilled
     n_written: int = 0          # KV entries written (prompt + decoded)
     tokens: List[int] = dataclasses.field(default_factory=list)
-    occupied_steps: int = 0     # sampling opportunities while slotted
+    occupied_steps: int = 0     # steps while slotted (chunks + decodes)
     preemptions: int = 0
 
 
@@ -55,8 +62,9 @@ class Scheduler:
         self.pool = pool
         self.max_slots = max_slots
         self.waiting: Deque[Sequence] = deque()
-        # admission-ordered: append on admit, remove on finish/preempt —
-        # running[-1] is always the youngest (the preemption victim)
+        # admission-ordered (PREFILL + RUNNING): append on admit, remove
+        # on finish/preempt — running[-1] is always the youngest (the
+        # preemption victim)
         self.running: List[Sequence] = []
         self._free_slots = list(range(max_slots - 1, -1, -1))
 
@@ -71,13 +79,14 @@ class Scheduler:
 
     # --------------------------------------------------------- admission
     def _prompt_pages(self, seq: Sequence) -> int:
-        return -(-len(seq.req.prompt) // self.pool.page_size)
+        return self.pool.pages_for(len(seq.req.prompt))
 
     def admit(self) -> List[Sequence]:
         """Join-at-prefill: move waiting requests into free slots while
         the pool can back their prompts.  FIFO — the queue head blocking
         on pages stalls admission (no head-of-line bypass, so a large
-        request cannot starve)."""
+        request cannot starve).  Admitted requests enter PREFILL; the
+        engine feeds their prompt chunks."""
         admitted: List[Sequence] = []
         while self.waiting and self._free_slots:
             seq = self.waiting[0]
@@ -93,21 +102,36 @@ class Scheduler:
             self.waiting.popleft()
             seq.slot = self._free_slots.pop()
             self.pool.assign(seq.slot, pages)
-            seq.state = SeqState.RUNNING
+            seq.state = SeqState.PREFILL
+            seq.n_prefilled = 0
             self.running.append(seq)
             admitted.append(seq)
         return admitted
 
+    def next_prefill(self) -> Optional[Sequence]:
+        """The oldest admitted request with prompt chunks left to feed."""
+        for seq in self.running:
+            if seq.state is SeqState.PREFILL:
+                return seq
+        return None
+
+    def decoding(self) -> List[Sequence]:
+        """Admitted requests past prefill (advanced by decode steps)."""
+        return [s for s in self.running if s.state is SeqState.RUNNING]
+
     # -------------------------------------------------- decode capacity
     def ensure_decode_capacity(self) -> None:
-        """Before a decode step: every running request writing position
+        """Before a decode step: every decoding request writing position
         ``n_written`` must have page ``n_written // page_size`` mapped.
-        Pool exhausted → preempt the youngest running request and retry
-        (its pages come back to the free list)."""
+        Pool exhausted → preempt the youngest admitted request and retry
+        (its pages come back to the free list).  No-op for pure
+        recurrent-state archs (nothing pages)."""
+        if not self.pool.has_kv_pages:
+            return
         ps = self.pool.page_size
         for seq in list(self.running):       # oldest first
             if seq.state is not SeqState.RUNNING:
-                continue                     # preempted below, this pass
+                continue                     # prefilling, or preempted
             while self.pool.slot_page_count(seq.slot) <= seq.n_written // ps:
                 page = self.pool.alloc(1)
                 if page is not None:
@@ -126,9 +150,12 @@ class Scheduler:
     def preempt(self, seq: Sequence) -> None:
         """Recompute-style preemption: drop slot+pages+generated tokens
         and re-queue at the FRONT (deterministic per-uid sampling keys
-        regenerate the identical prefix on re-admission)."""
+        regenerate the identical prefix on re-admission; re-admission
+        also resets any recurrent-state slot rows, so the replayed
+        prefill starts from the same fresh state)."""
         self._release(seq)
         seq.state = SeqState.WAITING
+        seq.n_prefilled = 0
         seq.n_written = 0
         seq.tokens = []
         seq.preemptions += 1

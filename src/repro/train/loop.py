@@ -32,7 +32,7 @@ import logging
 import os
 import statistics
 import time
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +160,12 @@ class Trainer:
         params = self.model.init(jax.random.key(seed))
         if self.mesh is not None:
             from repro.dist.sharding import shard_params
-            params = shard_params(params, self.mesh, self.fsdp_axes)
+            # head_dim: whole heads per model shard — the jax 0.4.x CPU
+            # partitioner mis-executes rope/attention when the model
+            # axis splits a head (ROADMAP; reproduced on the training
+            # path by tests/test_train.py::test_mesh_headsplit_parity)
+            params = shard_params(params, self.mesh, self.fsdp_axes,
+                                  head_dim=self.model.cfg.hd)
         opt_state = self.opt.init(params)
         ef_state = (ef_init(params) if self.cfg.grad_compression
                     else jnp.zeros(()))
@@ -185,7 +190,8 @@ class Trainer:
         opt_state = OptState(*opt_state)
         if self.mesh is not None:   # elastic: re-shard onto current mesh
             from repro.dist.sharding import param_shardings
-            psh = param_shardings(params, self.mesh, self.fsdp_axes)
+            psh = param_shardings(params, self.mesh, self.fsdp_axes,
+                                  head_dim=self.model.cfg.hd)
             params = jax.device_put(params, psh)
             opt_state = OptState(
                 jax.device_put(opt_state.step),

@@ -8,6 +8,8 @@ the module's plain tests still collect and run.
 
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

@@ -1,9 +1,7 @@
 """Whole-model pruning engine: end-to-end quality + fault tolerance."""
 
-import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -134,3 +134,20 @@ def test_paged_attn_kernel_windowed():
     np.testing.assert_allclose(np.asarray(got)[live],
                                np.asarray(want)[live],
                                rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attn_default_dispatch():
+    """Default dispatch matches the oracle.  On plain CPU this is the
+    oracle vs itself (trivially exact); under JAX_PALLAS_INTERPRET=1
+    (the CI tier-1 kernel step) the default dispatch runs the Pallas
+    kernel BODY in interpret mode — exercising kernels/paged_attn.py
+    logic, not just the jnp shortcut, on CPU-only runners."""
+    key = jax.random.key(3)
+    q, kp, vp, bt, lengths = _paged_setup(key, 3, 2, 2, 16, 10, 8, 3)
+    got = ops.paged_attention(q, kp, vp, bt, lengths)
+    want = ref.paged_attn_ref(q, kp, vp, bt, lengths)
+    live = np.asarray(lengths) > 0
+    tol = 0.0 if not ops.FORCE_PALLAS else 2e-5
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(want)[live],
+                               rtol=tol, atol=tol)

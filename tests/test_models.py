@@ -102,7 +102,7 @@ def test_full_config_shapes_only(arch):
     assert counts["total"] > 0
     assert counts["active"] <= counts["total"]
     leaves = jax.tree.leaves(shapes)
-    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
 
 
 def test_param_counts_match_published_scale():

@@ -1,9 +1,7 @@
 """Serving engine + the 2:4-sparse weight path."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import PruningEngine
 from repro.data import calibration_batches
@@ -62,9 +60,9 @@ def test_sparse_serving_matches_dense(tiny_lm):
     packed = sparsify_params(pruned, patterns=(r"mlp/(wi|wg|wo)$",))
 
     # packed leaves actually exist (layer-stacked: one per linear kind)
-    n_packed = sum(1 for l in jax.tree.leaves(
+    n_packed = sum(1 for leaf in jax.tree.leaves(
         packed, is_leaf=lambda x: isinstance(x, dict) and "vals" in x)
-        if isinstance(l, dict) and "vals" in l)
+        if isinstance(leaf, dict) and "vals" in leaf)
     assert n_packed == 3
 
     prompts = [np.asarray([2, 4, 6, 8], np.int32)]
@@ -80,8 +78,8 @@ def test_sparsify_skips_non_sparse(tiny_lm):
     model, params, _ = tiny_lm
     packed = sparsify_params(params)
     assert not any(
-        isinstance(l, dict) and "vals" in l
-        for l in jax.tree.leaves(
+        isinstance(leaf, dict) and "vals" in leaf
+        for leaf in jax.tree.leaves(
             packed, is_leaf=lambda x: isinstance(x, dict) and "vals" in x))
 
 

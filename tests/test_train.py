@@ -1,7 +1,6 @@
 """Fault-tolerant trainer: resume bit-exactness, NaN guard, stragglers."""
 
 import json
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,7 @@ def _params_equal(a, b, atol=0.0):
 def test_loss_decreases(tmp_path):
     tr, _ = _mk(tmp_path, "a", total_steps=40)
     tr.run()
-    lines = [json.loads(l) for l in
+    lines = [json.loads(line) for line in
              open(tr.metrics_path)]
     assert lines[-1]["loss"] < lines[0]["loss"]
 
@@ -130,5 +129,73 @@ def test_grad_compression_trains(tmp_path):
     """int8 EF-compressed grads still reduce the loss (error feedback)."""
     tr, _ = _mk(tmp_path, "g", total_steps=40, grad_compression=True)
     tr.run()
-    lines = [json.loads(l) for l in open(tr.metrics_path)]
+    lines = [json.loads(line) for line in open(tr.metrics_path)]
     assert lines[-1]["loss"] < lines[0]["loss"]
+
+
+def test_mesh_headsplit_parity():
+    """ROADMAP head-split hazard, TRAINING path: on a 2x4 mesh where the
+    model axis would split a head (d_model=64, 2 heads, hd=32 -> 16
+    columns/shard), the jax 0.4.x CPU partitioner mis-executes the
+    rope/attention chain.  The Trainer now shards with the param_specs
+    whole-heads guard (head_dim=cfg.hd) — mesh losses must track the
+    single-device run step for step.  Subprocess for the same reason as
+    test_dist.py: the parent must keep its single CPU device."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    code = """
+        import jax, numpy as np
+        from repro.data import DataPipeline
+        from repro.dist import use_mesh
+        from repro.models import LM
+        from repro.models.base import ArchConfig
+        from repro.optim import AdamW
+        from repro.train.loop import make_train_step
+        from repro.dist.sharding import shard_params
+
+        cfg = ArchConfig(name="headsplit", family="dense", num_layers=2,
+                         d_model=64, num_heads=2, num_kv_heads=2,
+                         d_ff=128, vocab_size=128, period=("attn",),
+                         mlp_kind="swiglu", dtype="float32")
+        model = LM(cfg)
+        pipe = DataPipeline(cfg, global_batch=4, seq_len=32, seed=0)
+        opt = AdamW(lr=1e-3)
+        step_fn = make_train_step(model, opt)
+
+        def losses(mesh, **kw):
+            params = model.init(jax.random.key(0))
+            if mesh is not None:
+                params = shard_params(params, mesh,
+                                      fsdp_axes=("data",), **kw)
+            state = opt.init(params)
+            ef = jax.numpy.zeros(())
+            jstep = jax.jit(step_fn)
+            out = []
+            for s in range(5):
+                params, state, ef, m = jstep(params, state, ef,
+                                             pipe.batch_at(s))
+                out.append(float(m["loss"]))
+            return out
+
+        base = losses(None)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
+            guarded = losses(mesh, head_dim=cfg.hd)   # Trainer's layout
+        err = max(abs(a - b) for a, b in zip(base, guarded))
+        assert err < 1e-4, f"guarded mesh training diverged: {err}"
+        print("OK", err)
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout
