@@ -8,10 +8,14 @@ Gate policy (docs in benchmarks/README.md):
   - **throughput** (any metric named ``tok_s``): HARD failure when the
     current value drops more than ``--threshold`` (default 20%) below
     the baseline — the regression gate;
-  - everything else (utilization, speedup ratios, prune wall-clock) is
-    reported as an informational delta only: wall-clocks and thin
-    speedup margins vary too much across runner generations to fail a
-    PR on.
+  - **step latency** (``step_ms_p50`` — p50 per-fused-decode-step wall
+    from serve_throughput): HARD failure when it RISES more than
+    ``--threshold`` above baseline (lower is better — the
+    device-resident decode loop's headline metric, ISSUE-5);
+  - everything else (utilization, syncs/token, speedup ratios, prune
+    wall-clock) is reported as an informational delta only: wall-clocks
+    and thin speedup margins vary too much across runner generations to
+    fail a PR on.
 
 Results present on only one side are reported and skipped (renamed or
 newly added benchmarks don't break the gate; refresh the baseline with
@@ -24,7 +28,8 @@ import argparse
 import json
 import sys
 
-HARD_METRICS = ("tok_s",)  # higher is better, gated on regression
+HARD_METRICS = ("tok_s",)  # higher is better, gated on drops
+HARD_METRICS_LOWER = ("step_ms_p50",)  # lower is better, gated on rises
 
 
 def _load(path: str) -> dict:
@@ -52,6 +57,10 @@ def compare(current: dict, baseline: dict, threshold: float):
             tag = f"  {name}.{key}: {b:.3f} -> {c:.3f} ({delta:+.1%})"
             if key in HARD_METRICS and delta < -threshold:
                 failures.append(tag + f"  [> {threshold:.0%} regression]")
+            elif key in HARD_METRICS_LOWER and delta > threshold:
+                failures.append(
+                    tag + f"  [> {threshold:.0%} step-latency regression]"
+                )
             lines.append(tag)
     return failures, lines
 

@@ -5,25 +5,33 @@ A mixed-length workload (short+long prompts, heavily varied
 ``ServeEngine`` modes on the trained tiny LM AND the trained tiny Mamba
 (the recurrent-state pool path — no static fallback):
 
-  - static: requests bucketed by prompt length; each bucket decodes
-    until its LONGEST request finishes, burning every other slot's
-    steps into scrap positions;
-  - continuous: the paged step loop — prompts stream in as fixed-size
-    prefill chunks interleaved with decode, retiring requests hand
-    their slot and pages to the admission queue the same step.
+  - static: requests bucketed by prompt length; each bucket prefills
+    once and runs one fused on-device decode loop (one host sync per
+    bucket), burning finished slots' steps into scrap positions until
+    its LONGEST request drains;
+  - continuous: the paged step loop with the device-resident burst
+    (``steps_per_sync=8`` fused decode steps per host sync) — prompts
+    stream in as fixed-size prefill chunks interleaved with decode,
+    retiring requests hand their slot and pages to the admission queue
+    at the next sync.
 
-Reports tokens/sec for both, the speedup, and the mean per-request
-slot-utilization (Result.decode_steps accounting) — the fraction of
-occupied steps that actually emitted a token, i.e. exactly what
-continuous batching recovers.  Greedy outputs must be token-identical
-between the modes (the engines share one model/params); any mismatch is
-a hard failure.  The ``metrics`` dicts feed ``BENCH_<sha>.json`` and
-the CI bench-regression gate (benchmarks.gate).
+Reports, per mode: tokens/sec, mean per-request slot-utilization
+(Result.decode_steps accounting — the fraction of occupied steps that
+actually emitted a token), **host-syncs-per-token** (blocking device
+readbacks — the quantity the ISSUE-5 device-resident loop exists to
+amortize, from ``ServeEngine.stats``) and **p50 per-step latency**
+(median over repeated runs of the engine's decode-window wall /
+fused device steps — see ``_timed_runs``).  Greedy
+outputs must be token-identical between the modes (the engines share
+one model/params); any mismatch is a hard failure.  The ``metrics``
+dicts feed ``BENCH_<sha>.json`` and the CI bench-regression gate
+(benchmarks.gate — ``tok_s`` gates on drops, ``step_ms_p50`` on rises).
 """
 
 from __future__ import annotations
 
 import os
+import statistics
 import sys
 import time
 from typing import List
@@ -41,6 +49,8 @@ MAX_LEN = 96
 MAX_BATCH = 8
 PAGE_SIZE = 16
 PREFILL_CHUNK = 16
+STEPS_PER_SYNC = 8
+TIMED_RUNS = 3                 # p50 step latency needs a few samples
 
 
 def _workload(n: int, vocab: int) -> List["repro.serve.Request"]:
@@ -56,6 +66,29 @@ def _workload(n: int, vocab: int) -> List["repro.serve.Request"]:
     ]
 
 
+def _timed_runs(eng, reqs):
+    """TIMED_RUNS timed generates on a warm engine.  Returns (results,
+    median wall seconds, p50 per-fused-step latency ms, syncs/token).
+
+    Step latency uses the engine's own ``decode_wall_s`` counter — wall
+    time inside burst-dispatch→readback windows only, so the metric is
+    the decode hot path, NOT a reciprocal of tok/s (which also pays
+    prefill and host scheduling); the step_ms_p50 CI gate therefore
+    catches host-round-trip creep in the fused loop independently of
+    end-to-end throughput noise."""
+    walls, step_ms = [], []
+    results = None
+    for _ in range(TIMED_RUNS):
+        t0 = time.monotonic()
+        results = eng.generate(reqs)
+        walls.append(time.monotonic() - t0)
+        step_ms.append(eng.stats["decode_wall_s"] * 1e3
+                       / max(1, eng.stats["device_steps"]))
+    syncs_per_tok = eng.stats["host_syncs"] / max(1, eng.stats["tokens"])
+    return (results, statistics.median(walls), statistics.median(step_ms),
+            syncs_per_tok)
+
+
 def _bench_pair(tag: str, model, params, n_requests: int
                 ) -> List["BenchResult"]:
     """Static vs continuous on one model; hard-fails on token mismatch."""
@@ -67,7 +100,8 @@ def _bench_pair(tag: str, model, params, n_requests: int
                          mode="static")
     cont = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
                        mode="continuous", page_size=PAGE_SIZE,
-                       prefill_chunk=PREFILL_CHUNK)
+                       prefill_chunk=PREFILL_CHUNK,
+                       steps_per_sync=STEPS_PER_SYNC)
     if cont.mode != "continuous":
         raise RuntimeError(f"{tag}: fell back to static — the paged "
                            f"runtime must serve this arch")
@@ -79,12 +113,8 @@ def _bench_pair(tag: str, model, params, n_requests: int
     static.generate(reqs)
     cont.generate(reqs)
 
-    t0 = time.monotonic()
-    rs = static.generate(reqs)
-    static_s = time.monotonic() - t0
-    t0 = time.monotonic()
-    rc = cont.generate(reqs)
-    cont_s = time.monotonic() - t0
+    rs, static_s, static_step_ms, static_spt = _timed_runs(static, reqs)
+    rc, cont_s, cont_step_ms, cont_spt = _timed_runs(cont, reqs)
 
     for a, b in zip(rs, rc):
         if not np.array_equal(a.tokens, b.tokens):
@@ -100,12 +130,20 @@ def _bench_pair(tag: str, model, params, n_requests: int
     speedup = tps_cont / tps_static
     return [
         BenchResult(f"serve_throughput/{tag}/static", static_s * 1e6,
-                    f"tok_s={tps_static:.1f} util={util_static:.0%}",
-                    metrics={"tok_s": tps_static, "util": util_static}),
+                    f"tok_s={tps_static:.1f} util={util_static:.0%} "
+                    f"syncs/tok={static_spt:.3f} "
+                    f"step_p50={static_step_ms:.2f}ms",
+                    metrics={"tok_s": tps_static, "util": util_static,
+                             "syncs_per_tok": static_spt,
+                             "step_ms_p50": static_step_ms}),
         BenchResult(f"serve_throughput/{tag}/continuous", cont_s * 1e6,
                     f"tok_s={tps_cont:.1f} util={util_cont:.0%} "
+                    f"syncs/tok={cont_spt:.3f} "
+                    f"step_p50={cont_step_ms:.2f}ms "
                     f"speedup={speedup:.2f}x",
                     metrics={"tok_s": tps_cont, "util": util_cont,
+                             "syncs_per_tok": cont_spt,
+                             "step_ms_p50": cont_step_ms,
                              "speedup": speedup}),
     ]
 

@@ -368,6 +368,22 @@ def paged_state_block_specs(
     raise ValueError(kind)
 
 
+def decode_state_specs(state: Any) -> Any:
+    """PartitionSpec pytree for the serve engine's device-resident
+    scheduler-state blob (serve.fused.init_burst_state — per-slot
+    ``tok``/``pos``/``uid``/``n_tok``/``max_new``/``done`` vectors, the
+    token output ring, and the dynamic burst counter).
+
+    Everything replicates: the slot dim never shards (any device serves
+    any request — the same policy as the page/slot dims in
+    :func:`paged_kv_block_specs` / :func:`paged_state_block_specs`),
+    and the arrays are a few hundred bytes — but the specs live HERE,
+    in the rules layer, so the fused burst's loop-carried state has an
+    explicit mesh-agnostic placement instead of whatever jit infers
+    from an uncommitted host upload (docs/dist_api.md)."""
+    return jax.tree.map(lambda _: P(), state)
+
+
 # ----------------------------------------------------------------------
 # MoE expert-dispatch rules (models/moe.py shard_map)
 # ----------------------------------------------------------------------

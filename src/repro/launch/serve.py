@@ -60,6 +60,12 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens per chunked-prefill step "
                          "(continuous mode; one jitted shape)")
+    ap.add_argument("--steps-per-sync", type=int, default=8,
+                    help="fused decode steps per host sync (continuous "
+                         "mode): the device runs K sample/record/advance "
+                         "steps in one burst and the host only wakes for "
+                         "scheduler events — tokens are bit-identical "
+                         "for every K (docs/serving.md)")
     add_mesh_argument(ap)
     args = ap.parse_args()
 
@@ -95,7 +101,8 @@ def main() -> None:
                           temperature=temperature, top_k=top_k, top_p=top_p,
                           mode=args.serve_mode, page_size=args.page_size,
                           num_pages=args.num_pages,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          steps_per_sync=args.steps_per_sync)
         if eng.mode != args.serve_mode:
             print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
                   f"fell back to {eng.mode}")
@@ -115,8 +122,10 @@ def main() -> None:
         print(f"req {r.uid}: {r.tokens.tolist()}")
     util = float(np.mean([r.utilization for r in results]))
     preempts = sum(r.preemptions for r in results)
+    syncs = eng.stats["host_syncs"] / max(1, eng.stats["tokens"])
     print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
-          f"[{eng.mode}] slot-utilization {util:.0%}"
+          f"[{eng.mode}] slot-utilization {util:.0%} "
+          f"host-syncs/token {syncs:.2f}"
           + (f" preemptions {preempts}" if preempts else ""))
 
 

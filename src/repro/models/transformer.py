@@ -683,7 +683,14 @@ class LM:
         of write positions, -1 marking idle slots.  Attention layers go
         through the block tables; recurrent mixers advance their slot
         row exactly as in dense decode (slot index == batch row — the
-        pooled state IS the dense cache with batch = max_slots)."""
+        pooled state IS the dense cache with batch = max_slots).
+
+        Loop-carry contract (serve.fused relies on it): the returned
+        cache has the SAME pytree structure, shapes and dtypes as the
+        input — decode_step composes under ``lax.while_loop``/
+        ``fori_loop`` as a carried step, which is how the serve engine
+        runs K fused decode steps per host sync; ``pos`` is a traced
+        value in both modes (never concretized)."""
         cfg = self.cfg
         h = embed_apply(params["embed"], token[:, None], cfg)
         pl = self._prefix_len(None)

@@ -3,6 +3,8 @@
   engine     ServeEngine — continuous batching (static-bucket escape
              hatch), chunked paged prefill, greedy/temperature/top-k/
              top-p sampling, mesh-resident params
+  fused      the device-resident decode inner loop: fused sample/
+             record/advance step + multi-step burst (steps_per_sync)
   kvpool     PagedKVPool — fixed-size KV pages, free-list allocator,
              per-request block tables (dist-sharded pool);
              StatePool — slot-recycled recurrent-state pool for

@@ -4,42 +4,49 @@ Default mode ``"continuous"`` (docs/serving.md) runs a step loop over
 serve.scheduler: requests join the running batch the moment a slot and
 prompt pages are free, their prompts stream in as fixed-size token
 chunks (one jitted ``prefill_chunk`` shape, interleaved with everyone
-else's decode — no head-of-line blocking from long prompts), every
-decode step advances *all* running requests one token against the
-shared page pool (kernels.paged_attn / its jnp oracle) and the
-slot-recycled recurrent-state pool (Mamba/xLSTM/hybrid mixers,
-serve.kvpool.StatePool), and a request retiring at EOS or
-``max_new_tokens`` returns its slot and pages the same step — no decode
-is ever burned into a scrap position.  When the pool runs dry the
-youngest request is preempted (recompute-style) and re-queued.
+else's decode — no head-of-line blocking from long prompts), and the
+decode inner loop is **device-resident** (serve.fused): one donated
+fused step runs ``decode_step`` + per-(uid, step)-keyed sampling + EOS/
+length done-detection + position advance on device, wrapped in an
+on-device multi-step burst (``steps_per_sync`` fused steps per host
+sync).  The host only wakes to make scheduler decisions — admission,
+prefill chunks, retirement, page capacity, preemption — reading back
+one small packed state blob per burst instead of per-step logits.
+When the pool runs dry the youngest request is preempted
+(recompute-style) and re-queued.
 
 ``mode="static"`` is the legacy escape hatch (PR 2's ``pipeline="off"``
 pattern): requests bucketed by prompt length, one batched prefill + a
-decode loop per bucket, finished requests decoding into scrap until the
-whole bucket drains.  Archs the paged path can't serve (enc-dec,
-modality frontends, MoE — expert-capacity dropping makes logits
-batch-dependent) fall back to it automatically.
+fused on-device decode loop per bucket (one host sync per bucket),
+finished requests decoding into scrap until the whole bucket drains.
+Archs the paged path can't serve (enc-dec, modality frontends, MoE —
+expert-capacity dropping makes logits batch-dependent) fall back to it
+automatically.
 
 Both paths are greedy-token-identical: paged attention is bit-equal to
 the dense cache math (kernels.ref.paged_attn_ref), recurrent-state
 chunked prefill is the same recurrence with a different (tested)
 reduction tree, and sampling — greedy, temperature, top-k, top-p — is
 keyed per (request uid, step) in continuous mode so results are
-independent of batch composition and survive preemption-recompute.
+independent of batch composition, of ``steps_per_sync``, and survive
+preemption-recompute (the fused bodies run the per-step path's exact
+ops — tests/test_serve_paged.py fused-parity suite).
 
 On a mesh — passed explicitly or resolved from the active ``repro.dist``
 context — params are sharded by dist.sharding rules (tensor-parallel
 resident, no FSDP: serving re-reads weights every step), the paged pool
 is placed by the paged cache rules (pages/slots replicated over data,
-widths over ``model`` on head-aligned splits), and static-bucket batches
-are placed over the data axes when they divide.  Without a mesh
-everything stays single-device.
+widths over ``model`` on head-aligned splits), the device-resident
+scheduler-state blob by ``dist.sharding.decode_state_specs``
+(replicated), and static-bucket batches are placed over the data axes
+when they divide.  Without a mesh everything stays single-device.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -47,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.serve import fused
 
 # every mixer the paged runtime serves: attention (KV pages) plus the
 # recurrent kinds (slot-pooled state — the canonical list lives on LM,
@@ -99,6 +107,7 @@ class ServeEngine:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         prefill_chunk: int = 32,
+        steps_per_sync: int = 8,
     ):
         from repro.dist import current_ctx, dp_axes_of, shard_params
 
@@ -131,8 +140,21 @@ class ServeEngine:
         self.top_k = top_k
         self.top_p = top_p
         self.extra_batch = extra_batch or {}
+        self.steps_per_sync = max(1, int(steps_per_sync))
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        # static-mode fused decode loops, built per early-exit variant on
+        # first use (see fused.make_static_burst)
+        self._static_bursts: Dict[bool, object] = {}
+        # per-generate runtime counters (host_syncs counts BLOCKING
+        # device readbacks — the quantity the device-resident loop
+        # exists to amortize; device_steps counts fused decode steps;
+        # decode_wall_s is wall time inside burst-dispatch→readback
+        # windows only — prefill and host scheduling excluded, so
+        # decode_wall_s / device_steps is a step-latency signal
+        # independent of end-to-end tokens/sec)
+        self.stats: Dict[str, float] = {
+            "host_syncs": 0, "device_steps": 0, "tokens": 0,
+            "decode_wall_s": 0.0}
 
         cfg = model.cfg
         # MoE is excluded: expert-capacity dropping makes each row's
@@ -145,6 +167,7 @@ class ServeEngine:
         self.mode = mode if paged_ok else "static"
         self.pool = None
         self.state_pool = None
+        self._state_shardings = None
         if self.mode == "continuous":
             from repro.serve.kvpool import PagedKVPool, StatePool
 
@@ -158,12 +181,20 @@ class ServeEngine:
                 max_slots=max_batch, max_len=max_len, mesh=mesh)
             state = StatePool(model, max_slots=max_batch)
             self.state_pool = state if state.has_state else None
-            self._decode_paged = jax.jit(
-                functools.partial(model.decode_step, page_size=page_size),
-                donate_argnums=(2,))
+            self._burst = fused.make_continuous_burst(
+                model, page_size, temperature=temperature, top_k=top_k,
+                top_p=top_p, eos_id=eos_id)
             self._prefill_chunk = jax.jit(
                 functools.partial(model.prefill_chunk, page_size=page_size),
                 donate_argnums=(2,))
+            if mesh is not None:
+                from repro.dist import named_shardings
+                from repro.dist.sharding import decode_state_specs
+
+                template = fused.init_burst_state(max_batch,
+                                                  self.steps_per_sync)
+                self._state_shardings = named_shardings(
+                    mesh, decode_state_specs(template))
 
     def _place_batch(self, batch: Dict[str, jax.Array]
                      ) -> Dict[str, jax.Array]:
@@ -177,33 +208,14 @@ class ServeEngine:
                 for k, v in batch.items()}
 
     # ------------------------------------------------------------------
-    # sampling
+    # static mode: one fused on-device decode loop per bucket
     # ------------------------------------------------------------------
-    def _filter_logits(self, row: jax.Array) -> jax.Array:
-        """Top-k / top-p (nucleus) filtering of one temperature-scaled
-        logit row: filtered-out entries go to -inf.  Pure per-row — the
-        batched (vmapped) and solo paths run the identical ops, which is
-        what keeps the per-(uid, step) streams batch-independent."""
-        v = row.shape[-1]
-        if self.top_k is not None and 0 < self.top_k < v:
-            kth = jax.lax.top_k(row, self.top_k)[0][-1]
-            row = jnp.where(row < kth, -jnp.inf, row)
-        if self.top_p is not None and 0.0 < self.top_p < 1.0:
-            srt = jnp.sort(row)[::-1]                     # descending
-            probs = jax.nn.softmax(srt)
-            # keep the smallest prefix whose mass reaches top_p (the
-            # first token always survives: exclusive cumsum < p)
-            keep = (jnp.cumsum(probs) - probs) < self.top_p
-            thr = jnp.min(jnp.where(keep, srt, jnp.inf))
-            row = jnp.where(row < thr, -jnp.inf, row)
-        return row
-
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
-        """Static-mode sampling: one batch-keyed draw per step."""
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        rows = jax.vmap(self._filter_logits)(logits / self.temperature)
-        return jax.random.categorical(key, rows).astype(jnp.int32)
+    def _static_burst(self, early_exit: bool):
+        if early_exit not in self._static_bursts:
+            self._static_bursts[early_exit] = fused.make_static_burst(
+                self.model, temperature=self.temperature, top_k=self.top_k,
+                top_p=self.top_p, eos_id=self.eos_id, early_exit=early_exit)
+        return self._static_bursts[early_exit]
 
     def _pos_offset(self) -> int:
         cfg = self.model.cfg
@@ -227,28 +239,22 @@ class ServeEngine:
         cache = self.model.init_cache(b, self.max_len)
         logits, cache = self._prefill(self.params, batch, cache)
 
-        out = np.zeros((b, max_new), np.int32)
-        done = np.zeros((b,), bool)
-        n_emitted = np.zeros((b,), np.int32)
-        steps_run = 0
-        tok = None
-        for step in range(max_new):
-            key, sk = jax.random.split(key)
-            tok = self._sample(logits, sk)
-            tok_np = np.asarray(jax.device_get(tok))
-            steps_run = step + 1
-            for i in range(b):
-                if not done[i] and step < reqs[i].max_new_tokens:
-                    out[i, step] = tok_np[i]
-                    n_emitted[i] += 1
-                    if self.eos_id is not None and tok_np[i] == self.eos_id:
-                        done[i] = True
-                elif step >= reqs[i].max_new_tokens:
-                    done[i] = True
-            if done.all():
-                break
-            pos = jnp.asarray(off + plen + step, jnp.int32)
-            logits, cache = self._decode(self.params, tok, cache, pos)
+        max_new_arr = np.asarray([r.max_new_tokens for r in reqs], np.int32)
+        # when EOS is off and every request shares one max_new_tokens the
+        # done scan can never fire early — the fori variant drops that
+        # bookkeeping entirely (satellite: no wasted per-step scan)
+        early_exit = not (self.eos_id is None
+                          and len(set(max_new_arr.tolist())) == 1)
+        t0 = time.monotonic()
+        out, n_emitted, steps_run = self._static_burst(early_exit)(
+            self.params, cache, logits, key, max_new_arr, off + plen,
+            max_new)
+        out = np.asarray(jax.device_get(out))          # ONE sync per bucket
+        n_emitted = np.asarray(jax.device_get(n_emitted))
+        steps_run = int(jax.device_get(steps_run))
+        self.stats["decode_wall_s"] += time.monotonic() - t0
+        self.stats["host_syncs"] += 1
+        self.stats["device_steps"] += steps_run
 
         # every request occupies its slot for the whole bucket run —
         # the difference vs n_emitted is the scrap-position waste that
@@ -263,36 +269,19 @@ class ServeEngine:
     # continuous batching
     # ------------------------------------------------------------------
     def _sample_seq(self, logits_row: jax.Array, seq, base_key) -> int:
-        """Sample one token for one sequence.  Sampling is keyed per
-        (uid, step): independent of batch composition, and a preempted
-        request's recompute replays the identical stream."""
-        if self.temperature <= 0.0:
-            return int(jnp.argmax(logits_row))
-        key = jax.random.fold_in(
-            jax.random.fold_in(base_key, seq.req.uid), len(seq.tokens))
-        row = self._filter_logits(logits_row / self.temperature)
-        return int(jax.random.categorical(key, row))
-
-    def _sample_running(self, logits, running, base_key) -> np.ndarray:
-        """One batched sample for every running slot (single device
-        round-trip per step).  The vmapped per-row (uid, step) keys and
-        per-row top-k/p filter draw the same stream as
-        :meth:`_sample_seq` row by row."""
-        if self.temperature <= 0.0:
-            return np.asarray(jax.device_get(
-                jnp.argmax(logits, axis=-1).astype(jnp.int32)))[
-                    [seq.slot for seq in running]]
-        rows = logits[jnp.asarray([seq.slot for seq in running])]
-        uids = jnp.asarray([seq.req.uid for seq in running], jnp.int32)
-        steps = jnp.asarray([len(seq.tokens) for seq in running], jnp.int32)
-
-        def draw(uid, step, row):
-            key = jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
-            return jax.random.categorical(
-                key, self._filter_logits(row / self.temperature))
-
-        return np.asarray(jax.device_get(
-            jax.vmap(draw)(uids, steps, rows).astype(jnp.int32)))
+        """Sample one token for one sequence (the final prefill chunk —
+        a host sync by design: prefill completion is a scheduler event).
+        A 1-row fused.sample_rows call, so the per-(uid, step) draw has
+        exactly ONE implementation shared with the device burst:
+        independent of batch composition, and a preempted request's
+        recompute replays the identical stream."""
+        self.stats["host_syncs"] += 1
+        tok = fused.sample_rows(
+            logits_row[None], jnp.asarray([seq.req.uid], jnp.int32),
+            jnp.asarray([len(seq.tokens)], jnp.int32), base_key,
+            temperature=self.temperature, top_k=self.top_k,
+            top_p=self.top_p)
+        return int(tok[0])
 
     def _record(self, seq, tok: int, sched) -> None:
         seq.tokens.append(tok)
@@ -313,7 +302,8 @@ class ServeEngine:
         chunk = np.zeros((1, self.chunk_size), np.int32)
         piece = seq.req.prompt[start:start + self.chunk_size]
         chunk[0, :len(piece)] = piece
-        bt = jnp.asarray(pool.block_tables[seq.slot][None])
+        # the slot's table row sliced on device — no host re-upload
+        bt = pool.tables_device()[seq.slot][None]
         logits, pool.kv = self._prefill_chunk(
             self.params, {"tokens": jnp.asarray(chunk)}, pool.kv,
             jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32),
@@ -325,6 +315,23 @@ class ServeEngine:
             seq.state = SeqState.RUNNING
             self._record(seq, self._sample_seq(logits[0], seq, base_key),
                          sched)
+
+    def _plan_burst(self, sched, running) -> int:
+        """Burst length for this sync interval: ``steps_per_sync`` fused
+        steps, clamped to (a) 1 while any prompt is still chunk-
+        prefilling (the chunk/decode interleave is a host event every
+        step), (b) the longest possible remaining emission, and (c) the
+        page capacity the pool can map WITHOUT preempting
+        (Scheduler.extend_decode_capacity) — burst lookahead must never
+        cause a preemption the per-step loop wouldn't have."""
+        if sched.next_prefill() is not None:
+            return 1
+        k = self.steps_per_sync
+        if k > 1:
+            k = min(k, max(s.req.max_new_tokens - len(s.tokens)
+                           for s in running))
+            k = sched.extend_decode_capacity(max(1, k))
+        return max(1, k)
 
     def _generate_continuous(self, requests: Sequence[Request], seed: int
                              ) -> List[Result]:
@@ -339,6 +346,8 @@ class ServeEngine:
                 raise ValueError(f"request {r.uid} exceeds max_len")
             seqs.append(sched.submit(r))
         base_key = jax.random.key(seed)
+        B = self.max_batch
+        ring = self.steps_per_sync
 
         while sched.has_work():
             # 1) join-at-prefill: new requests take free slots/pages now
@@ -351,33 +360,50 @@ class ServeEngine:
                 if self.state_pool is not None:
                     pool.kv = self.state_pool.reset_slot(pool.kv, seq.slot)
             # 2) one prompt chunk for the oldest prefilling request,
-            #    interleaved with this step's decode
+            #    interleaved with this sync interval's decode burst
             seq = sched.next_prefill()
             if seq is not None:
                 self._run_prefill_chunk(seq, sched, base_key)
             running = sched.decoding()
             if not running:
                 continue
-            # 3) extend block tables for this step's writes (may preempt)
+            # 3) extend block tables for this interval's writes (may
+            #    preempt — the same single-step guarantee as before;
+            #    burst lookahead only ever shortens the burst)
             sched.ensure_decode_capacity()
             running = sched.decoding()
             if not running:
                 continue
-            # 4) one decode step over every decoding slot
-            tok = np.zeros((self.max_batch,), np.int32)
-            pos = np.full((self.max_batch,), -1, np.int32)
-            for seq in running:
-                tok[seq.slot] = seq.tokens[-1]
-                pos[seq.slot] = seq.n_written
-            logits, pool.kv = self._decode_paged(
-                self.params, jnp.asarray(tok), pool.kv, jnp.asarray(pos),
-                paged={"block_tables": pool.tables_device()})
-            sampled = self._sample_running(logits, running, base_key)
-            # 5) advance / retire
-            for i, seq in enumerate(running):
-                seq.n_written += 1
-                seq.occupied_steps += 1
-                self._record(seq, int(sampled[i]), sched)
+            k = self._plan_burst(sched, running)
+            # 4) one device-resident burst over every decoding slot: up
+            #    to k fused decode/sample/record/advance steps, no host
+            #    round-trip inside
+            state = fused.init_burst_state(B, ring)
+            for s in running:
+                state["tok"][s.slot] = s.tokens[-1]
+                state["pos"][s.slot] = s.n_written
+                state["uid"][s.slot] = s.req.uid
+                state["n_tok"][s.slot] = len(s.tokens)
+                state["max_new"][s.slot] = s.req.max_new_tokens
+            state["steps_left"] = np.asarray(k, np.int32)
+            if self._state_shardings is not None:
+                state = jax.device_put(state, self._state_shardings)
+            t0 = time.monotonic()
+            pool.kv, state = self._burst(
+                self.params, pool.kv, pool.tables_device(), state, base_key)
+            st = jax.device_get(state)     # the ONE host sync per burst
+            self.stats["decode_wall_s"] += time.monotonic() - t0
+            self.stats["host_syncs"] += 1
+            self.stats["device_steps"] += k - int(st["steps_left"])
+            # 5) advance / retire from the packed state blob
+            for s in list(running):
+                n = int(st["n_out"][s.slot])
+                if n:
+                    s.tokens.extend(int(t) for t in st["out"][s.slot, :n])
+                    s.n_written += n
+                    s.occupied_steps += n
+                if bool(st["done"][s.slot]):
+                    sched.finish(s)
 
         return sorted(
             (Result(uid=s.req.uid,
@@ -392,18 +418,24 @@ class ServeEngine:
     def generate(self, requests: Sequence[Request], seed: int = 0
                  ) -> List[Result]:
         """Serve a set of requests (continuous batching; static mode
-        buckets by prompt length)."""
+        buckets by prompt length).  ``self.stats`` afterwards holds the
+        run's host-sync / fused-device-step / token counters."""
+        self.stats = {"host_syncs": 0, "device_steps": 0, "tokens": 0,
+                      "decode_wall_s": 0.0}
         if self.mode == "continuous":
-            return self._generate_continuous(requests, seed)
-        buckets: Dict[int, List[Request]] = {}
-        for r in requests:
-            buckets.setdefault(len(r.prompt), []).append(r)
-        results: List[Result] = []
-        key = jax.random.key(seed)
-        for plen in sorted(buckets):
-            bucket = buckets[plen]
-            for i in range(0, len(bucket), self.max_batch):
-                key, bk = jax.random.split(key)
-                results.extend(self._run_bucket(
-                    bucket[i:i + self.max_batch], bk))
-        return sorted(results, key=lambda r: r.uid)
+            results = self._generate_continuous(requests, seed)
+        else:
+            buckets: Dict[int, List[Request]] = {}
+            for r in requests:
+                buckets.setdefault(len(r.prompt), []).append(r)
+            results = []
+            key = jax.random.key(seed)
+            for plen in sorted(buckets):
+                bucket = buckets[plen]
+                for i in range(0, len(bucket), self.max_batch):
+                    key, bk = jax.random.split(key)
+                    results.extend(self._run_bucket(
+                        bucket[i:i + self.max_batch], bk))
+            results = sorted(results, key=lambda r: r.uid)
+        self.stats["tokens"] = sum(len(r.tokens) for r in results)
+        return results

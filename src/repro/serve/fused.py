@@ -1,0 +1,280 @@
+"""Device-resident decode: the fused sample/record/advance step and the
+multi-step burst loops the serve engine dispatches between scheduler
+events (docs/serving.md).
+
+The PR-3/4 step loop was host-driven: every decode step blocked on a
+``device_get`` of the sampled tokens, did per-sequence Python
+bookkeeping, and re-uploaded ``tok``/``pos`` vectors — at small batch
+the host round-trip, not the pruned matmuls, set the token clock.  This
+module moves the whole inner loop on device:
+
+  - :func:`sample_rows` / :func:`sample_batch` — the sampling math
+    (greedy argmax, temperature, top-k / top-p nucleus filtering) as
+    pure functions.  ``sample_rows`` keys every draw per (request uid,
+    generated-token index) — the contract that makes streams
+    batch-independent and preemption-recompute bit-exact — and is the
+    single implementation behind the fused loop, the host-side prefill
+    sample, and the old per-step path's tests.
+  - :func:`make_continuous_burst` — a jitted ``lax.while_loop`` over
+    the fused step: paged ``decode_step`` + per-(uid, step) sampling +
+    EOS / length done-detection + position advance, carrying the
+    scheduler state (:func:`init_burst_state`: ``tok``/``pos``/``uid``/
+    ``n_tok``/``max_new``/``done`` + a token output ring) as device
+    arrays.  The host syncs ONCE per burst, reading back the small
+    packed state blob instead of per-step logits.
+  - :func:`make_static_burst` — the static-bucket twin: dense-cache
+    decode + batch-keyed sampling + done bookkeeping fused into one
+    while_loop (or, when EOS is off and every request shares one
+    ``max_new_tokens`` so the early-exit scan could never fire, a plain
+    ``fori_loop`` with no done tracking at all).
+
+Token-stream parity is the correctness bar: the fused bodies run the
+exact ops of the per-step path (same decode_step, same per-row filter,
+same fold_in keys / key splits), so ``steps_per_sync=1`` and
+``steps_per_sync=8`` — and the old host loop — emit bit-identical
+tokens (tests/test_serve_paged.py fused-parity suite).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# sampling (pure functions — shared by fused and host paths)
+# ----------------------------------------------------------------------
+def filter_logits(row: jax.Array, top_k: Optional[int],
+                  top_p: Optional[float]) -> jax.Array:
+    """Top-k / top-p (nucleus) filtering of one temperature-scaled logit
+    row: filtered-out entries go to -inf.  Pure per-row — the batched
+    (vmapped) and solo paths run the identical ops, which is what keeps
+    the per-(uid, step) streams batch-independent."""
+    v = row.shape[-1]
+    if top_k is not None and 0 < top_k < v:
+        kth = jax.lax.top_k(row, top_k)[0][-1]
+        row = jnp.where(row < kth, -jnp.inf, row)
+    if top_p is not None and 0.0 < top_p < 1.0:
+        srt = jnp.sort(row)[::-1]                     # descending
+        probs = jax.nn.softmax(srt)
+        # keep the smallest prefix whose mass reaches top_p (the
+        # first token always survives: exclusive cumsum < p)
+        keep = (jnp.cumsum(probs) - probs) < top_p
+        thr = jnp.min(jnp.where(keep, srt, jnp.inf))
+        row = jnp.where(row < thr, -jnp.inf, row)
+    return row
+
+
+def sample_rows(logits: jax.Array, uids: jax.Array, steps: jax.Array,
+                base_key, *, temperature: float, top_k: Optional[int],
+                top_p: Optional[float]) -> jax.Array:
+    """Per-(uid, step)-keyed sampling of every row — the continuous-mode
+    draw.  Row ``i`` uses ``fold_in(fold_in(base_key, uids[i]),
+    steps[i])``; idle rows draw garbage that is never recorded."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(uid, step, row):
+        key = jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
+        return jax.random.categorical(
+            key, filter_logits(row / temperature, top_k, top_p))
+
+    return jax.vmap(draw)(uids, steps, logits).astype(jnp.int32)
+
+
+def sample_batch(logits: jax.Array, key, *, temperature: float,
+                 top_k: Optional[int], top_p: Optional[float]) -> jax.Array:
+    """Static-mode sampling: one batch-keyed draw per step."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    rows = jax.vmap(lambda r: filter_logits(r, top_k, top_p))(
+        logits / temperature)
+    return jax.random.categorical(key, rows).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# continuous mode: the fused multi-step burst
+# ----------------------------------------------------------------------
+def init_burst_state(max_batch: int, ring: int) -> Dict[str, np.ndarray]:
+    """Host template of the device-resident scheduler state.  All slots
+    start idle (``pos`` -1); the engine fills the running slots before
+    each burst.  ``out`` is the token output ring — ``ring`` must be
+    ≥ the burst length so every emitted token has a cell."""
+    return {
+        "tok": np.zeros((max_batch,), np.int32),
+        "pos": np.full((max_batch,), -1, np.int32),     # -1 = idle slot
+        "uid": np.zeros((max_batch,), np.int32),
+        "n_tok": np.zeros((max_batch,), np.int32),      # len(seq.tokens)
+        "max_new": np.zeros((max_batch,), np.int32),
+        "done": np.zeros((max_batch,), bool),           # finished in-burst
+        "out": np.zeros((max_batch, ring), np.int32),   # emitted tokens
+        "n_out": np.zeros((max_batch,), np.int32),
+        "steps_left": np.asarray(0, np.int32),          # dynamic burst len
+    }
+
+
+def make_continuous_burst(model, page_size: int, *, temperature: float,
+                          top_k: Optional[int], top_p: Optional[float],
+                          eos_id: Optional[int]):
+    """Build the jitted K-step continuous-decode burst.
+
+    ``burst(params, kv, tables, state, base_key) -> (kv, state)`` runs
+    up to ``state["steps_left"]`` fused decode steps entirely on device
+    (early-exiting when every slot goes idle), donating the paged cache.
+    The burst length is a *dynamic* field of the state blob, so one
+    compiled body serves every ``steps_per_sync`` setting — which is
+    also what makes K=1 and K=8 token streams trivially bit-identical.
+
+    Per fused step: ``decode_step(paged=...)`` writes this token's KV /
+    advances the state rows and yields logits; :func:`sample_rows`
+    draws the next token under the per-(uid, step) key; the token is
+    recorded into the output ring; EOS / ``max_new`` mark the slot done
+    (``pos`` frozen to -1 — its remaining burst steps treat it idle,
+    exactly like a retired slot awaiting re-admission); live slots
+    advance ``pos``.  The host retires done slots at the next sync.
+    """
+    eos = -1 if eos_id is None else int(eos_id)   # -1 never matches a token
+
+    def burst(params, kv, tables, state, base_key):
+        def cond(carry):
+            _, st = carry
+            return (st["steps_left"] > 0) & jnp.any(st["pos"] >= 0)
+
+        def body(carry):
+            kv, st = carry
+            active = st["pos"] >= 0
+            logits, kv = model.decode_step(
+                params, st["tok"], kv, st["pos"],
+                paged={"block_tables": tables}, page_size=page_size)
+            sampled = sample_rows(
+                logits, st["uid"], st["n_tok"], base_key,
+                temperature=temperature, top_k=top_k, top_p=top_p)
+            rows = jnp.arange(sampled.shape[0])
+            cell = st["out"][rows, st["n_out"]]
+            out = st["out"].at[rows, st["n_out"]].set(
+                jnp.where(active, sampled, cell))
+            n_tok = st["n_tok"] + active.astype(jnp.int32)
+            newly_done = active & ((sampled == eos) | (n_tok >= st["max_new"]))
+            st = {
+                "tok": jnp.where(active, sampled, st["tok"]),
+                "pos": jnp.where(newly_done, -1,
+                                 jnp.where(active, st["pos"] + 1, st["pos"])),
+                "uid": st["uid"],
+                "n_tok": n_tok,
+                "max_new": st["max_new"],
+                "done": st["done"] | newly_done,
+                "out": out,
+                "n_out": st["n_out"] + active.astype(jnp.int32),
+                "steps_left": st["steps_left"] - 1,
+            }
+            return kv, st
+
+        return jax.lax.while_loop(cond, body, (kv, state))
+
+    return jax.jit(burst, donate_argnums=(1,))
+
+
+# ----------------------------------------------------------------------
+# static mode: the fused bucket loop
+# ----------------------------------------------------------------------
+def make_static_burst(model, *, temperature: float, top_k: Optional[int],
+                      top_p: Optional[float], eos_id: Optional[int],
+                      early_exit: bool):
+    """Build the jitted static-bucket decode loop.
+
+    ``burst(params, cache, logits, key, max_new, pos0) ->
+    (out, n_emitted, steps_run)`` consumes the bucket's prefill logits
+    and runs the whole sample/record/advance loop on device — the host
+    syncs once per bucket instead of once per step.  ``out`` width (the
+    bucket's max ``max_new_tokens``) fixes the trip count.
+
+    ``early_exit=False`` is the satellite fast path for buckets where
+    the done scan can never fire early (``eos_id is None`` and every
+    request shares one ``max_new_tokens``): a plain ``fori_loop`` with
+    no done/emit bookkeeping at all.  Both variants replay the host
+    loop's exact op and ``jax.random.split`` sequence, so tokens are
+    unchanged.
+    """
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def step_sample(logits, key):
+        key, sk = jax.random.split(key)
+        tok = sample_batch(logits, sk, temperature=temperature,
+                           top_k=top_k, top_p=top_p)
+        return tok, key
+
+    if not early_exit:
+        # fori variant: no done scan, no emit masks, no n_emitted — the
+        # early exit could never fire, so none of that bookkeeping runs
+        def fori(params, cache, logits, key, pos0, width):
+            b = logits.shape[0]
+
+            def body(i, carry):
+                cache, logits, key, out = carry
+                tok, key = step_sample(logits, key)
+                out = out.at[:, i].set(tok)
+                logits, cache = model.decode_step(params, tok, cache,
+                                                  pos0 + i)
+                return cache, logits, key, out
+
+            out = jnp.zeros((b, width), jnp.int32)
+            _, _, _, out = jax.lax.fori_loop(0, width, body,
+                                             (cache, logits, key, out))
+            return out
+
+        # no donation: the bucket cache dies with the loop (it is not an
+        # output, so a donated buffer would be unusable anyway)
+        jitted = jax.jit(fori, static_argnums=(5,))
+
+        def call_fori(params, cache, logits, key, max_new_arr, pos0, width):
+            width = int(width)
+            out = jitted(params, cache, logits, key,
+                         jnp.asarray(pos0, jnp.int32), width)
+            b = logits.shape[0]
+            return (out, np.full((b,), width, np.int32), width)
+
+        return call_fori
+
+    def loop(params, cache, logits, key, max_new, pos0, width):
+        b = logits.shape[0]
+
+        def cond(carry):
+            _, _, _, st = carry
+            return (st["step"] < width) & ~jnp.all(st["done"])
+
+        def body(carry):
+            cache, logits, key, st = carry
+            tok, key = step_sample(logits, key)
+            step = st["step"]
+            emit = (~st["done"]) & (step < max_new)
+            out = st["out"].at[:, step].set(
+                jnp.where(emit, tok, st["out"][:, step]))
+            done = st["done"] | (emit & (tok == eos)) | (step >= max_new)
+            logits, cache = model.decode_step(params, tok, cache,
+                                              pos0 + step)
+            st = {"out": out, "done": done,
+                  "n_emitted": st["n_emitted"] + emit.astype(jnp.int32),
+                  "step": step + 1}
+            return cache, logits, key, st
+
+        st0 = {"out": jnp.zeros((b, width), jnp.int32),
+               "done": jnp.zeros((b,), bool),
+               "n_emitted": jnp.zeros((b,), jnp.int32),
+               "step": jnp.asarray(0, jnp.int32)}
+        _, _, _, st = jax.lax.while_loop(cond, body,
+                                         (cache, logits, key, st0))
+        return st["out"], st["n_emitted"], st["step"]
+
+    jitted = jax.jit(loop, static_argnums=(6,))
+
+    def call_while(params, cache, logits, key, max_new_arr, pos0, width):
+        out, n_emitted, steps = jitted(
+            params, cache, logits, key,
+            jnp.asarray(max_new_arr, jnp.int32),
+            jnp.asarray(pos0, jnp.int32), int(width))
+        return out, n_emitted, steps
+
+    return call_while

@@ -80,6 +80,8 @@ class PagedKVPool:
             (max_slots, self.pages_per_slot), np.int32)
         self._n_pages = np.zeros((max_slots,), np.int32)
         self._free: List[int] = []
+        self._tables_dev: Optional[jax.Array] = None
+        self._dirty: set = set()          # slot rows changed since upload
         self.reset()
 
     # ----------------------------------------------------------- alloc
@@ -121,7 +123,7 @@ class PagedKVPool:
         assert n + len(pages) <= self.pages_per_slot, "slot exceeds max_len"
         self.block_tables[slot, n:n + len(pages)] = pages
         self._n_pages[slot] = n + len(pages)
-        self._tables_dev = None
+        self._dirty.add(slot)
 
     def slot_page_count(self, slot: int) -> int:
         return int(self._n_pages[slot])
@@ -134,7 +136,7 @@ class PagedKVPool:
         self.release(self.slot_pages(slot))
         self.block_tables[slot] = 0
         self._n_pages[slot] = 0
-        self._tables_dev = None
+        self._dirty.add(slot)
 
     def reset(self) -> None:
         """Recycle every page (between ``generate`` calls).  Device
@@ -144,12 +146,25 @@ class PagedKVPool:
         self._n_pages[:] = 0
         self._free = list(range(self.num_pages - 1, 0, -1))
         self._tables_dev = None
+        self._dirty.clear()
 
     def tables_device(self) -> jax.Array:
-        """Device mirror of the block tables, re-uploaded only after a
-        table mutation — steady-state decode steps reuse it."""
+        """Device-resident mirror of the block tables.  Uploaded whole
+        exactly once; after that, table mutations only mark their slot
+        row dirty and the next call scatters the few changed rows into
+        the resident array (``.at[rows].set``) — steady-state bursts
+        reuse the device buffer with zero host traffic, and a retire/
+        admit/page-extend event costs one small row upload instead of a
+        full-table re-upload."""
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.block_tables)
+            self._dirty.clear()
+        elif self._dirty:
+            rows = sorted(self._dirty)
+            self._tables_dev = self._tables_dev.at[
+                jnp.asarray(rows, jnp.int32)].set(
+                    jnp.asarray(self.block_tables[rows]))
+            self._dirty.clear()
         return self._tables_dev
 
 

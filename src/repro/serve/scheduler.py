@@ -146,6 +146,42 @@ class Scheduler:
                 if victim is seq:
                     break                    # re-queued; stop extending
 
+    def extend_decode_capacity(self, k: int) -> int:
+        """Burst lookahead (the device-resident decode loop): map pages
+        so every decoding request can write up to ``k`` more tokens
+        without a host sync.  Non-preempting — when the free list runs
+        short the burst SHORTENS instead of evicting anyone (a
+        preemption the per-step loop wouldn't have caused is never
+        worth saving a sync).  Two passes: size the largest burst the
+        free list can back for EVERY decoding request, then allocate
+        exactly that lookahead — nobody hoards pages a clamped burst
+        won't use (hoarded lookahead would drain the pool and cause
+        preemptions at the NEXT sync that per-step mode never sees).
+        Returns the safe burst length ≤ ``k``; call after
+        :meth:`ensure_decode_capacity`, which guarantees step one.
+        No-op (full ``k``) for pure recurrent-state archs."""
+        if not self.pool.has_kv_pages:
+            return k
+        ps = self.pool.page_size
+        decoding = [s for s in self.running
+                    if s.state is SeqState.RUNNING]
+
+        def extra_pages(seq: Sequence, kk: int) -> int:
+            want = min(kk, seq.req.max_new_tokens - len(seq.tokens))
+            need = -(-(seq.n_written + want) // ps)
+            return max(0, need - self.pool.slot_page_count(seq.slot))
+
+        k_safe = k
+        while k_safe > 1 and (sum(extra_pages(s, k_safe)
+                                  for s in decoding)
+                              > self.pool.free_pages):
+            k_safe -= 1
+        for seq in decoding:
+            n = extra_pages(seq, k_safe)
+            if n:
+                self.pool.assign(seq.slot, self.pool.alloc(n))
+        return k_safe
+
     # --------------------------------------------------------- lifecycle
     def preempt(self, seq: Sequence) -> None:
         """Recompute-style preemption: drop slot+pages+generated tokens

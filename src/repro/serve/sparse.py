@@ -17,7 +17,7 @@ import re
 from typing import Any, Sequence
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 
@@ -28,14 +28,25 @@ DEFAULT_SPARSE_PATTERNS = (
 )
 
 
+@jax.jit
+def _groups_24(w: jax.Array) -> jax.Array:
+    """≤2 nonzeros in every 4-row group along the input dim → scalar
+    bool, reduced ON DEVICE (one trace per leaf shape)."""
+    k, n = w.shape[-2], w.shape[-1]
+    g = w.reshape(*w.shape[:-2], k // 4, 4, n)
+    return jnp.all((g != 0).sum(axis=-2) <= 2)
+
+
 def _is_24_sparse(w) -> bool:
-    """2:4 along the input dim — 2-D (K, N) or layer-stacked (L, K, N)."""
+    """2:4 along the input dim — 2-D (K, N) or layer-stacked (L, K, N).
+
+    The check is a jitted device reduction fetching only the scalar
+    verdict — sparsifying a large checkpoint never pulls candidate
+    weight matrices through host memory (the old ``device_get``-then-
+    numpy scan serialized every leaf over the wire)."""
     if w.ndim not in (2, 3) or w.shape[-2] % 4:
         return False
-    a = np.asarray(jax.device_get(w))
-    a = a.reshape(-1, a.shape[-2] // 4, 4, a.shape[-1]) if w.ndim == 3 \
-        else a.reshape(1, a.shape[0] // 4, 4, a.shape[1])
-    return bool(((a != 0).sum(axis=2) <= 2).all())
+    return bool(jax.device_get(_groups_24(jnp.asarray(w))))
 
 
 def sparsify_params(
@@ -49,8 +60,6 @@ def sparsify_params(
     Layer-stacked leaves (L, K, N) pack to stacked {"vals": (L, K/2, N),
     "idx": …} — the scan's tree-slice then yields per-layer packed dicts
     that models.layers.linear dispatches to the nm_spmm kernel."""
-    import jax.numpy as jnp
-
     regs = [re.compile(p) for p in patterns]
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     leaves = []

@@ -136,6 +136,66 @@ def test_paged_attn_kernel_windowed():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_fused_sample_step():
+    """The fused sample/record/advance step (serve.fused, ISSUE-5): a
+    3-step device burst on the tiny LM's paged cache must emit exactly
+    the tokens of three standalone decode_step + argmax rounds.  Under
+    JAX_PALLAS_INTERPRET=1 (the CI kernel step) the burst's
+    paged_attention dispatch runs the Pallas kernel BODY in interpret
+    mode — the fused loop is exercised over the kernel, not just the
+    jnp oracle."""
+    from repro.configs import get_config
+    from repro.models import LM
+    from repro.serve import fused
+
+    cfg = get_config("paper_tiny_lm")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    params["unembed"]["head"] = params["unembed"]["head"] * 8.0
+    ps = 8
+    prompt = np.asarray([1, 2, 3, 4, 5], np.int32)
+    L = len(prompt)
+    bt = np.zeros((1, 4), np.int32)
+    bt[0, 0] = 1                                  # page 0 is scrap
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :L] = prompt
+
+    def prefilled():
+        kv = model.init_paged_cache(4, ps)
+        lg, kv = model.prefill_paged(
+            params, {"tokens": jnp.asarray(toks)}, kv,
+            lengths=jnp.asarray([L], jnp.int32),
+            block_tables=jnp.asarray(bt), page_size=ps)
+        return jnp.argmax(lg, -1).astype(jnp.int32), kv
+
+    # reference: standalone decode_step + argmax, per step
+    tok, kv = prefilled()
+    want = []
+    for step in range(3):
+        lg, kv = model.decode_step(
+            params, tok, kv, jnp.asarray([L + step], jnp.int32),
+            paged={"block_tables": jnp.asarray(bt)}, page_size=ps)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        want.append(int(tok[0]))
+
+    # fused: one 3-step burst, single readback
+    tok, kv = prefilled()
+    burst = fused.make_continuous_burst(model, ps, temperature=0.0,
+                                        top_k=None, top_p=None,
+                                        eos_id=None)
+    state = fused.init_burst_state(1, 3)
+    state["tok"][0] = int(tok[0])
+    state["pos"][0] = L
+    state["n_tok"][0] = 1
+    state["max_new"][0] = 10
+    state["steps_left"] = np.asarray(3, np.int32)
+    _, st = burst(params, kv, jnp.asarray(bt), state, jax.random.key(0))
+    st = jax.device_get(st)
+    assert int(st["n_out"][0]) == 3
+    assert st["out"][0].tolist() == want
+    assert int(st["pos"][0]) == L + 3 and not bool(st["done"][0])
+
+
 def test_paged_attn_default_dispatch():
     """Default dispatch matches the oracle.  On plain CPU this is the
     oracle vs itself (trivially exact); under JAX_PALLAS_INTERPRET=1
