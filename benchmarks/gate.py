@@ -12,6 +12,10 @@ Gate policy (docs in benchmarks/README.md):
     from serve_throughput): HARD failure when it RISES more than
     ``--threshold`` above baseline (lower is better — the
     device-resident decode loop's headline metric, ISSUE-5);
+  - **time-to-first-token** (``ttft_ms_p50`` — p50 submit→first-token
+    under serve_throughput's oversubscribed streaming leg): HARD
+    failure when it RISES more than ``--threshold`` (lower is better —
+    the serving front end's headline SLA metric, ISSUE-6);
   - everything else (utilization, syncs/token, speedup ratios, prune
     wall-clock) is reported as an informational delta only: wall-clocks
     and thin speedup margins vary too much across runner generations to
@@ -29,7 +33,10 @@ import json
 import sys
 
 HARD_METRICS = ("tok_s",)  # higher is better, gated on drops
-HARD_METRICS_LOWER = ("step_ms_p50",)  # lower is better, gated on rises
+# lower is better, gated on rises: p50 fused-step latency (ISSUE-5) and
+# p50 time-to-first-token under the oversubscribed streaming workload
+# (ISSUE-6 — queueing + chunked prefill latency the front end exposes)
+HARD_METRICS_LOWER = ("step_ms_p50", "ttft_ms_p50")
 
 
 def _load(path: str) -> dict:

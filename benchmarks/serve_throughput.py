@@ -23,9 +23,22 @@ amortize, from ``ServeEngine.stats``) and **p50 per-step latency**
 (median over repeated runs of the engine's decode-window wall /
 fused device steps — see ``_timed_runs``).  Greedy
 outputs must be token-identical between the modes (the engines share
-one model/params); any mismatch is a hard failure.  The ``metrics``
-dicts feed ``BENCH_<sha>.json`` and the CI bench-regression gate
-(benchmarks.gate — ``tok_s`` gates on drops, ``step_ms_p50`` on rises).
+one model/params); any mismatch is a hard failure.
+
+A third leg (``streaming``) drives a :class:`ContinuousSession` under
+an **oversubscribed Poisson arrival** process — rate calibrated to 2×
+the engine's measured batch capacity, so the wait queue builds exactly
+as an overloaded server's would — and reports the serving-latency
+metrics the front end makes visible: **TTFT** p50/p95 (submit → first
+streamed token, which pays queueing + chunked prefill) and **TPOT**
+(mean per-token latency after the first).  The same leg checks the
+prefill sync-floor fix: the mixed workload keeps prompts streaming in,
+and ``burst`` (fused device steps per host sync) must stay well above 1
+— before prefill was fused into the burst body it clamped to ~1 here.
+
+The ``metrics`` dicts feed ``BENCH_<sha>.json`` and the CI
+bench-regression gate (benchmarks.gate — ``tok_s`` gates on drops,
+``step_ms_p50`` and ``ttft_ms_p50`` on rises).
 """
 
 from __future__ import annotations
@@ -73,17 +86,21 @@ def _timed_runs(eng, reqs):
     Step latency uses the engine's own ``decode_wall_s`` counter — wall
     time inside burst-dispatch→readback windows only, so the metric is
     the decode hot path, NOT a reciprocal of tok/s (which also pays
-    prefill and host scheduling); the step_ms_p50 CI gate therefore
-    catches host-round-trip creep in the fused loop independently of
-    end-to-end throughput noise."""
+    host scheduling); the step_ms_p50 CI gate therefore catches
+    host-round-trip creep in the fused loop independently of end-to-end
+    throughput noise.  Prefill chunks are fused into the same dispatch
+    windows (ISSUE-6 sync-floor fix), so the per-unit divisor counts
+    decode steps + chunks — each chunk is one more fused unit inside
+    the window, not decode-step time."""
     walls, step_ms = [], []
     results = None
     for _ in range(TIMED_RUNS):
         t0 = time.monotonic()
         results = eng.generate(reqs)
         walls.append(time.monotonic() - t0)
-        step_ms.append(eng.stats["decode_wall_s"] * 1e3
-                       / max(1, eng.stats["device_steps"]))
+        units = (eng.stats["device_steps"]
+                 + eng.stats.get("prefill_chunks", 0))
+        step_ms.append(eng.stats["decode_wall_s"] * 1e3 / max(1, units))
     syncs_per_tok = eng.stats["host_syncs"] / max(1, eng.stats["tokens"])
     return (results, statistics.median(walls), statistics.median(step_ms),
             syncs_per_tok)
@@ -148,6 +165,79 @@ def _bench_pair(tag: str, model, params, n_requests: int
     ]
 
 
+OVERSUBSCRIPTION = 2.0         # Poisson arrival rate vs measured capacity
+
+
+def _bench_streaming(tag: str, model, params, n_requests: int
+                     ) -> List["BenchResult"]:
+    """Oversubscribed Poisson-arrival streaming: TTFT / TPOT through a
+    ContinuousSession (the server's code path minus the socket)."""
+    from benchmarks.common import BenchResult
+    from repro.serve import ServeEngine
+
+    reqs = _workload(n_requests, model.cfg.vocab_size)
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+                      mode="continuous", page_size=PAGE_SIZE,
+                      prefill_chunk=PREFILL_CHUNK,
+                      steps_per_sync=STEPS_PER_SYNC)
+    eng.generate(reqs)                               # warm the jit caches
+    t0 = time.monotonic()
+    eng.generate(reqs)
+    capacity_s = time.monotonic() - t0               # batch service time
+
+    # exponential inter-arrival gaps at OVERSUBSCRIPTION× the measured
+    # service rate: the queue grows for the whole run, so TTFT includes
+    # real queueing delay, not just prefill
+    rng = np.random.default_rng(1)
+    gaps = rng.exponential(scale=capacity_s / n_requests / OVERSUBSCRIPTION,
+                           size=n_requests)
+    arrivals = np.cumsum(gaps)
+
+    session = eng.session(seed=0)
+    stats0 = dict(eng.stats)
+    arrive, ttft, finish, ntok = {}, {}, {}, {}
+    submitted = 0
+    start = time.monotonic()
+    while submitted < n_requests or session.has_work():
+        now = time.monotonic() - start
+        while submitted < n_requests and arrivals[submitted] <= now:
+            r = reqs[submitted]
+            session.submit(r)
+            arrive[r.uid] = arrivals[submitted]
+            submitted += 1
+        if not session.has_work():                   # idle: next arrival
+            time.sleep(max(0.0, arrivals[submitted]
+                           - (time.monotonic() - start)))
+            continue
+        for ev in session.step():
+            t = time.monotonic() - start
+            if ev.tokens and ev.uid not in ttft:
+                ttft[ev.uid] = t - arrive[ev.uid]
+            if ev.finished:
+                finish[ev.uid] = t
+                ntok[ev.uid] = len(ev.result.tokens)
+    wall = time.monotonic() - start
+
+    toks = sum(ntok.values())
+    ttfts = np.asarray([ttft[u] for u in sorted(ttft)])
+    tpots = [(finish[u] - arrive[u] - ttft[u]) / (ntok[u] - 1)
+             for u in sorted(finish) if ntok[u] > 1]
+    syncs = eng.stats["host_syncs"] - stats0["host_syncs"]
+    burst = ((eng.stats["device_steps"] - stats0["device_steps"])
+             / max(1, syncs))
+    m = {"tok_s": toks / wall,
+         "ttft_ms_p50": float(np.percentile(ttfts, 50)) * 1e3,
+         "ttft_ms_p95": float(np.percentile(ttfts, 95)) * 1e3,
+         "tpot_ms": float(np.mean(tpots)) * 1e3,
+         "syncs_per_tok": syncs / max(1, toks),
+         "burst": burst}
+    return [BenchResult(
+        f"serve_throughput/{tag}/streaming", wall * 1e6,
+        f"tok_s={m['tok_s']:.1f} ttft_p50={m['ttft_ms_p50']:.1f}ms "
+        f"ttft_p95={m['ttft_ms_p95']:.1f}ms tpot={m['tpot_ms']:.2f}ms "
+        f"burst={burst:.1f}", metrics=m)]
+
+
 def run(fast: bool = False) -> List["BenchResult"]:
     from benchmarks.common import trained_model
 
@@ -155,6 +245,7 @@ def run(fast: bool = False) -> List["BenchResult"]:
     results = []
     model, params, _ = trained_model("lm")
     results += _bench_pair("lm", model, params, n_requests)
+    results += _bench_streaming("lm", model, params, n_requests)
     # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config
     # through mode="continuous", tokens identical to the dense cache)
     model, params, _ = trained_model("mamba")

@@ -1,17 +1,29 @@
 """Serving driver: continuous-batching decode off a (optionally
-2:4-pruned) checkpoint.
+2:4-pruned) checkpoint — batch CLI or a streaming HTTP server.
 
+  # batch: N random-prompt requests through the router, print a summary
   python -m repro.launch.serve --arch paper-tiny-lm \\
       --params /tmp/pruned/pruned_params --sparse --requests 8
 
-``--serve-mode static`` selects the legacy bucketed path; the default
-continuous runtime takes ``--page-size`` / ``--num-pages`` for the paged
-KV pool (docs/serving.md).
+  # server: OpenAI-style /v1/completions with SSE streaming
+  python -m repro.launch.serve --arch paper-tiny-lm --server --port 8000 \\
+      --replicas 2 --queue-depth 64
+
+Both paths go through the SAME serve.frontend request/response objects
+(docs/serving_frontend.md): the batch mode builds CompletionRequests
+and calls ``Router.complete`` — it is a client of the server's code
+path, not parallel plumbing.  ``--serve-mode static`` keeps the legacy
+bucketed engine (no sessions/streaming: the batch path lowers the same
+wire objects straight onto ``ServeEngine.generate``).
+
+The continuous runtime takes ``--page-size`` / ``--num-pages`` for the
+paged KV pool (docs/serving.md).
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -22,10 +34,13 @@ from repro import configs as cfglib
 from repro.ckpt import load_pytree
 from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
-from repro.serve import Request, ServeEngine, sparsify_params
+from repro.serve import ServeEngine, sparsify_params
+from repro.serve.frontend import (CompletionRequest, CompletionResponse,
+                                  Replica, Router, run_server,
+                                  to_engine_request)
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper_tiny_lm")
     ap.add_argument("--smoke", action="store_true")
@@ -66,67 +81,157 @@ def main() -> None:
                          "steps in one burst and the host only wakes for "
                          "scheduler events — tokens are bit-identical "
                          "for every K (docs/serving.md)")
+    # ---------------------------------------------- server front end
+    ap.add_argument("--server", action="store_true",
+                    help="run the streaming HTTP front end instead of "
+                         "a one-shot batch (docs/serving_frontend.md)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel ServeEngine replicas behind the "
+                         "least-loaded router (--server / batch "
+                         "continuous mode)")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="per-replica wait-queue cap; a full queue "
+                         "answers 429 instead of buffering unboundedly")
     add_mesh_argument(ap)
-    args = ap.parse_args()
+    return ap
 
+
+def load_model(args):
     cfg = (cfglib.get_smoke(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
-    with mesh_context(args.mesh):
-        model = LM(cfg)
-        if args.params:
-            tpl = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
-                               jax.eval_shape(model.init, jax.random.key(0)))
-            params, extra = load_pytree(args.params, tpl)
-            params = jax.tree.map(jnp.asarray, params)
-            print(f"loaded params ({extra})")
+    model = LM(cfg)
+    if args.params:
+        tpl = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
+                           jax.eval_shape(model.init, jax.random.key(0)))
+        params, extra = load_pytree(args.params, tpl)
+        params = jax.tree.map(jnp.asarray, params)
+        print(f"loaded params ({extra})")
+    else:
+        params = model.init(jax.random.key(0))
+    if args.sparse:
+        params = sparsify_params(params)
+        print("packed 2:4-sparse weights (nm_spmm path)")
+    return cfg, model, params
+
+
+def sampling_args(args):
+    temperature = args.temperature
+    top_k = top_p = None
+    if args.sampling == "top-k":
+        top_k = args.top_k
+    elif args.sampling == "top-p":
+        top_p = args.top_p
+    if args.sampling != "greedy" and temperature <= 0.0:
+        temperature = 1.0              # sampling modes need a live draw
+    return temperature, top_k, top_p
+
+
+def make_engine(model, params, args) -> ServeEngine:
+    temperature, top_k, top_p = sampling_args(args)
+    # the engine resolves the active mesh: params go resident
+    # tensor-parallel, the paged pool / bucket batches shard by the
+    # dist rules
+    return ServeEngine(model, params, max_batch=8, max_len=args.max_len,
+                       temperature=temperature, top_k=top_k, top_p=top_p,
+                       mode=args.serve_mode, page_size=args.page_size,
+                       num_pages=args.num_pages,
+                       prefill_chunk=args.prefill_chunk,
+                       steps_per_sync=args.steps_per_sync)
+
+
+def make_router(model, params, args) -> Router:
+    # every replica shares one seed: a request's stream is identical
+    # regardless of which replica serves it (per-(uid, step) keys)
+    reps = [Replica(make_engine(model, params, args), name=f"r{i}",
+                    seed=0, max_waiting=args.queue_depth)
+            for i in range(max(1, args.replicas))]
+    return Router(reps)
+
+
+def _random_requests(cfg, args):
+    rng = np.random.default_rng(0)
+    return [
+        CompletionRequest(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=8,
+                                dtype=np.int32).tolist(),
+            max_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+
+
+def run_batch(cfg, model, params, args) -> None:
+    creqs = _random_requests(cfg, args)
+    eng = None
+    t0 = time.monotonic()
+    if args.serve_mode == "continuous":
+        router = make_router(model, params, args)
+        eng = router.replicas[0].engine
+        if eng.mode != "continuous":
+            # arch fell back to static: no sessions — drop to the
+            # static path below on the already-built engine
+            router.close()
         else:
-            params = model.init(jax.random.key(0))
-        if args.sparse:
-            params = sparsify_params(params)
-            print("packed 2:4-sparse weights (nm_spmm path)")
+            t0 = time.monotonic()
+            results = router.complete(creqs)
+            dt = time.monotonic() - t0
+            router.drain(timeout=30)
+            _summary(results, [r.engine for r in router.replicas], dt)
+            return
+    if eng is None:
+        eng = make_engine(model, params, args)
+    if eng.mode != args.serve_mode:
+        print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
+              f"fell back to {eng.mode}")
+    # static engines have no session/streaming path; same wire objects,
+    # lowered straight onto generate()
+    t0 = time.monotonic()
+    raw = eng.generate([to_engine_request(c, c.uid) for c in creqs])
+    dt = time.monotonic() - t0
+    _summary([CompletionResponse.from_result(r) for r in raw], [eng], dt)
 
-        temperature = args.temperature
-        top_k = top_p = None
-        if args.sampling == "top-k":
-            top_k = args.top_k
-        elif args.sampling == "top-p":
-            top_p = args.top_p
-        if args.sampling != "greedy" and temperature <= 0.0:
-            temperature = 1.0          # sampling modes need a live draw
 
-        # the engine resolves the active mesh: params go resident
-        # tensor-parallel, the paged pool / bucket batches shard by the
-        # dist rules
-        eng = ServeEngine(model, params, max_batch=8, max_len=args.max_len,
-                          temperature=temperature, top_k=top_k, top_p=top_p,
-                          mode=args.serve_mode, page_size=args.page_size,
-                          num_pages=args.num_pages,
-                          prefill_chunk=args.prefill_chunk,
-                          steps_per_sync=args.steps_per_sync)
-        if eng.mode != args.serve_mode:
-            print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
-                  f"fell back to {eng.mode}")
-        rng = np.random.default_rng(0)
-        reqs = [
-            Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=8,
-                                        dtype=np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)
-        ]
-        t0 = time.monotonic()
-        results = eng.generate(reqs)
-        dt = time.monotonic() - t0
+def _summary(results, engines, dt) -> None:
     toks = sum(len(r.tokens) for r in results)
     for r in results[:4]:
-        print(f"req {r.uid}: {r.tokens.tolist()}")
-    util = float(np.mean([r.utilization for r in results]))
+        print(f"req {r.uid}: {list(r.tokens)}"
+              + (f"  [{r.replica}]" if r.replica else ""))
     preempts = sum(r.preemptions for r in results)
-    syncs = eng.stats["host_syncs"] / max(1, eng.stats["tokens"])
+    syncs = sum(e.stats["host_syncs"] for e in engines)
+    burst = (sum(e.stats["device_steps"] for e in engines) / syncs
+             if syncs else 0.0)
+    mode = engines[0].mode
     print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
-          f"[{eng.mode}] slot-utilization {util:.0%} "
-          f"host-syncs/token {syncs:.2f}"
+          f"[{mode}] host-syncs/token {syncs / max(1, toks):.2f} "
+          f"burst {burst:.1f}"
           + (f" preemptions {preempts}" if preempts else ""))
+
+
+def run_frontend(cfg, model, params, args) -> None:
+    if args.serve_mode != "continuous":
+        raise SystemExit("--server needs the continuous runtime "
+                         "(streaming sessions); drop --serve-mode static")
+    router = make_router(model, params, args)
+    if router.replicas[0].engine.mode != "continuous":
+        raise SystemExit(f"--server unsupported for {cfg.name}: the arch "
+                         f"falls back to the static bucketed engine")
+    try:
+        asyncio.run(run_server(router, args.host, args.port))
+    except KeyboardInterrupt:
+        print("draining...")
+        router.drain(timeout=30)
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    with mesh_context(args.mesh):
+        cfg, model, params = load_model(args)
+        if args.server:
+            run_frontend(cfg, model, params, args)
+        else:
+            run_batch(cfg, model, params, args)
 
 
 if __name__ == "__main__":

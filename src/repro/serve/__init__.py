@@ -10,19 +10,27 @@
              StatePool — slot-recycled recurrent-state pool for
              Mamba/xLSTM/hybrid mixers
   scheduler  Scheduler — join-at-prefill / chunked prefill / retire-at-
-             EOS / preemption
+             EOS / preemption; SLA-aware wait queue (priority/deadline)
+             with a QueueFull depth cap
+  frontend   async serving layer: OpenAI-style streaming HTTP server,
+             worker-thread replicas, least-loaded multi-replica router
+             (docs/serving_frontend.md)
   sparse     2:4 weight packing → kernels.nm_spmm serve path
 """
 
-from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.engine import (ServeEngine, Request, Result, StreamEvent,
+                                ContinuousSession)
 from repro.serve.kvpool import PagedKVPool, StatePool
-from repro.serve.scheduler import Scheduler, Sequence, SeqState
+from repro.serve.scheduler import Scheduler, Sequence, SeqState, QueueFull
 from repro.serve.sparse import sparsify_params, DEFAULT_SPARSE_PATTERNS
 
 __all__ = [
     "ServeEngine",
     "Request",
     "Result",
+    "StreamEvent",
+    "ContinuousSession",
+    "QueueFull",
     "PagedKVPool",
     "StatePool",
     "Scheduler",

@@ -45,7 +45,6 @@ when they divide.  Without a mesh everything stays single-device.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -61,12 +60,24 @@ from repro.serve import fused
 # which init_paged_cache validates against)
 PAGED_KINDS = ("attn", "attn_local", *LM.STATE_KINDS)
 
+# template of ServeEngine.stats (docstring on the __init__ assignment)
+_STATS_ZERO = {"host_syncs": 0, "device_steps": 0, "prefill_chunks": 0,
+               "tokens": 0, "decode_wall_s": 0.0}
+
 
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray                   # (L,) int32
     max_new_tokens: int = 16
+    # SLA fields (serve.scheduler wait-queue order: higher priority
+    # first, then earlier deadline, then arrival; both optional — all-
+    # default requests admit in exact FIFO).  ``deadline`` is an
+    # absolute time.monotonic() timestamp; it orders admission and lets
+    # the front end shed already-expired requests — it is never a hard
+    # kill switch for running sequences.
+    priority: int = 0
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -88,6 +99,21 @@ class Result:
         if self.decode_steps <= 0:
             return 0.0
         return len(self.tokens) / self.decode_steps
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One request's incremental progress at one host sync — the unit
+    the streaming front end forwards as an SSE chunk.  ``tokens`` holds
+    only the NEWLY emitted tokens (after a preemption the recompute
+    replays the identical prefix, and the session suppresses the
+    already-delivered portion, so a streaming consumer never sees a
+    duplicate).  ``result`` is set on the final event."""
+
+    uid: int
+    tokens: List[int]
+    finished: bool = False
+    result: Optional[Result] = None
 
 
 class ServeEngine:
@@ -148,13 +174,14 @@ class ServeEngine:
         # per-generate runtime counters (host_syncs counts BLOCKING
         # device readbacks — the quantity the device-resident loop
         # exists to amortize; device_steps counts fused decode steps;
-        # decode_wall_s is wall time inside burst-dispatch→readback
-        # windows only — prefill and host scheduling excluded, so
-        # decode_wall_s / device_steps is a step-latency signal
-        # independent of end-to-end tokens/sec)
-        self.stats: Dict[str, float] = {
-            "host_syncs": 0, "device_steps": 0, "tokens": 0,
-            "decode_wall_s": 0.0}
+        # prefill_chunks counts chunk dispatches (each fused into its
+        # interval's burst — the sync-floor fix means chunks no longer
+        # clamp bursts to K=1, so device_steps / host_syncs stays > 1
+        # under prefill-heavy load); decode_wall_s is wall time inside
+        # burst-dispatch→readback windows only — host scheduling
+        # excluded, so decode_wall_s / device_steps is a step-latency
+        # signal independent of end-to-end tokens/sec)
+        self.stats: Dict[str, float] = dict(_STATS_ZERO)
 
         cfg = model.cfg
         # MoE is excluded: expert-capacity dropping makes each row's
@@ -181,18 +208,20 @@ class ServeEngine:
                 max_slots=max_batch, max_len=max_len, mesh=mesh)
             state = StatePool(model, max_slots=max_batch)
             self.state_pool = state if state.has_state else None
+            # output ring: burst length + 1 cell for the token a
+            # prefill-fused burst's activation emits (fused module doc)
+            self._ring = self.steps_per_sync + 1
             self._burst = fused.make_continuous_burst(
                 model, page_size, temperature=temperature, top_k=top_k,
                 top_p=top_p, eos_id=eos_id)
-            self._prefill_chunk = jax.jit(
-                functools.partial(model.prefill_chunk, page_size=page_size),
-                donate_argnums=(2,))
+            self._prefill_burst = fused.make_prefill_burst(
+                model, page_size, self.chunk_size, temperature=temperature,
+                top_k=top_k, top_p=top_p, eos_id=eos_id)
             if mesh is not None:
                 from repro.dist import named_shardings
                 from repro.dist.sharding import decode_state_specs
 
-                template = fused.init_burst_state(max_batch,
-                                                  self.steps_per_sync)
+                template = fused.init_burst_state(max_batch, self._ring)
                 self._state_shardings = named_shardings(
                     mesh, decode_state_specs(template))
 
@@ -268,151 +297,31 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # continuous batching
     # ------------------------------------------------------------------
-    def _sample_seq(self, logits_row: jax.Array, seq, base_key) -> int:
-        """Sample one token for one sequence (the final prefill chunk —
-        a host sync by design: prefill completion is a scheduler event).
-        A 1-row fused.sample_rows call, so the per-(uid, step) draw has
-        exactly ONE implementation shared with the device burst:
-        independent of batch composition, and a preempted request's
-        recompute replays the identical stream."""
-        self.stats["host_syncs"] += 1
-        tok = fused.sample_rows(
-            logits_row[None], jnp.asarray([seq.req.uid], jnp.int32),
-            jnp.asarray([len(seq.tokens)], jnp.int32), base_key,
-            temperature=self.temperature, top_k=self.top_k,
-            top_p=self.top_p)
-        return int(tok[0])
-
-    def _record(self, seq, tok: int, sched) -> None:
-        seq.tokens.append(tok)
-        done = (len(seq.tokens) >= seq.req.max_new_tokens
-                or (self.eos_id is not None and tok == self.eos_id))
-        if done:
-            sched.finish(seq)
-
-    def _run_prefill_chunk(self, seq, sched, base_key) -> None:
-        """Feed one fixed-size prompt chunk of the oldest prefilling
-        request; the final chunk samples the first token and moves the
-        request to decode."""
-        from repro.serve.scheduler import SeqState
-
-        pool = self.pool
-        plen = len(seq.req.prompt)
-        start = seq.n_prefilled
-        chunk = np.zeros((1, self.chunk_size), np.int32)
-        piece = seq.req.prompt[start:start + self.chunk_size]
-        chunk[0, :len(piece)] = piece
-        # the slot's table row sliced on device — no host re-upload
-        bt = pool.tables_device()[seq.slot][None]
-        logits, pool.kv = self._prefill_chunk(
-            self.params, {"tokens": jnp.asarray(chunk)}, pool.kv,
-            jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32),
-            jnp.asarray(seq.slot, jnp.int32), bt)
-        seq.n_prefilled = min(start + self.chunk_size, plen)
-        seq.occupied_steps += 1
-        if seq.n_prefilled >= plen:       # final chunk → first token
-            seq.n_written = plen
-            seq.state = SeqState.RUNNING
-            self._record(seq, self._sample_seq(logits[0], seq, base_key),
-                         sched)
-
-    def _plan_burst(self, sched, running) -> int:
-        """Burst length for this sync interval: ``steps_per_sync`` fused
-        steps, clamped to (a) 1 while any prompt is still chunk-
-        prefilling (the chunk/decode interleave is a host event every
-        step), (b) the longest possible remaining emission, and (c) the
-        page capacity the pool can map WITHOUT preempting
-        (Scheduler.extend_decode_capacity) — burst lookahead must never
-        cause a preemption the per-step loop wouldn't have."""
-        if sched.next_prefill() is not None:
-            return 1
-        k = self.steps_per_sync
-        if k > 1:
-            k = min(k, max(s.req.max_new_tokens - len(s.tokens)
-                           for s in running))
-            k = sched.extend_decode_capacity(max(1, k))
-        return max(1, k)
+    def session(self, seed: int = 0, max_waiting: Optional[int] = None
+                ) -> "ContinuousSession":
+        """Open an incremental serving session (continuous mode only):
+        requests join at any time (``submit``), every ``step()`` is one
+        host-sync interval yielding per-request :class:`StreamEvent`
+        increments — the entry point the async streaming front end
+        (serve.frontend) drives.  ``max_waiting`` caps the scheduler
+        wait-queue depth (``scheduler.QueueFull`` → HTTP 429)."""
+        if self.mode != "continuous":
+            raise RuntimeError(
+                "streaming sessions need the continuous paged runtime "
+                f"(engine is mode={self.mode!r})")
+        return ContinuousSession(self, seed=seed, max_waiting=max_waiting)
 
     def _generate_continuous(self, requests: Sequence[Request], seed: int
                              ) -> List[Result]:
-        from repro.serve.scheduler import Scheduler
-
-        pool = self.pool
-        pool.reset()
-        sched = Scheduler(pool, self.max_batch)
-        seqs = []
+        session = self.session(seed=seed)
         for r in requests:
-            if len(r.prompt) + r.max_new_tokens > self.max_len:
-                raise ValueError(f"request {r.uid} exceeds max_len")
-            seqs.append(sched.submit(r))
-        base_key = jax.random.key(seed)
-        B = self.max_batch
-        ring = self.steps_per_sync
-
-        while sched.has_work():
-            # 1) join-at-prefill: new requests take free slots/pages now
-            #    (recurrent-state slot rows reset to the init state —
-            #    stale state can't mask by length like pages do)
-            for seq in sched.admit():
-                if seq.req.max_new_tokens <= 0:   # nothing to emit
-                    sched.finish(seq)
-                    continue
-                if self.state_pool is not None:
-                    pool.kv = self.state_pool.reset_slot(pool.kv, seq.slot)
-            # 2) one prompt chunk for the oldest prefilling request,
-            #    interleaved with this sync interval's decode burst
-            seq = sched.next_prefill()
-            if seq is not None:
-                self._run_prefill_chunk(seq, sched, base_key)
-            running = sched.decoding()
-            if not running:
-                continue
-            # 3) extend block tables for this interval's writes (may
-            #    preempt — the same single-step guarantee as before;
-            #    burst lookahead only ever shortens the burst)
-            sched.ensure_decode_capacity()
-            running = sched.decoding()
-            if not running:
-                continue
-            k = self._plan_burst(sched, running)
-            # 4) one device-resident burst over every decoding slot: up
-            #    to k fused decode/sample/record/advance steps, no host
-            #    round-trip inside
-            state = fused.init_burst_state(B, ring)
-            for s in running:
-                state["tok"][s.slot] = s.tokens[-1]
-                state["pos"][s.slot] = s.n_written
-                state["uid"][s.slot] = s.req.uid
-                state["n_tok"][s.slot] = len(s.tokens)
-                state["max_new"][s.slot] = s.req.max_new_tokens
-            state["steps_left"] = np.asarray(k, np.int32)
-            if self._state_shardings is not None:
-                state = jax.device_put(state, self._state_shardings)
-            t0 = time.monotonic()
-            pool.kv, state = self._burst(
-                self.params, pool.kv, pool.tables_device(), state, base_key)
-            st = jax.device_get(state)     # the ONE host sync per burst
-            self.stats["decode_wall_s"] += time.monotonic() - t0
-            self.stats["host_syncs"] += 1
-            self.stats["device_steps"] += k - int(st["steps_left"])
-            # 5) advance / retire from the packed state blob
-            for s in list(running):
-                n = int(st["n_out"][s.slot])
-                if n:
-                    s.tokens.extend(int(t) for t in st["out"][s.slot, :n])
-                    s.n_written += n
-                    s.occupied_steps += n
-                if bool(st["done"][s.slot]):
-                    sched.finish(s)
-
-        return sorted(
-            (Result(uid=s.req.uid,
-                    tokens=np.asarray(s.tokens, np.int32),
-                    prompt_len=len(s.req.prompt),
-                    decode_steps=s.occupied_steps,
-                    preemptions=s.preemptions)
-             for s in seqs),
-            key=lambda r: r.uid)
+            session.submit(r)
+        results: List[Result] = []
+        while session.has_work():
+            for ev in session.step():
+                if ev.finished:
+                    results.append(ev.result)
+        return sorted(results, key=lambda r: r.uid)
 
     # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request], seed: int = 0
@@ -420,8 +329,7 @@ class ServeEngine:
         """Serve a set of requests (continuous batching; static mode
         buckets by prompt length).  ``self.stats`` afterwards holds the
         run's host-sync / fused-device-step / token counters."""
-        self.stats = {"host_syncs": 0, "device_steps": 0, "tokens": 0,
-                      "decode_wall_s": 0.0}
+        self.stats = dict(_STATS_ZERO)
         if self.mode == "continuous":
             results = self._generate_continuous(requests, seed)
         else:
@@ -439,3 +347,216 @@ class ServeEngine:
             results = sorted(results, key=lambda r: r.uid)
         self.stats["tokens"] = sum(len(r.tokens) for r in results)
         return results
+
+
+class ContinuousSession:
+    """Incremental, step-driven view of the continuous-batching loop.
+
+    ``generate()`` is a batch convenience wrapper around this: a session
+    accepts requests at ANY time (:meth:`submit` — the serving front
+    end's admission point, wait-queue ordered by priority/deadline and
+    capped by ``max_waiting``), and every :meth:`step` advances the
+    engine by exactly one host-sync interval, returning the
+    :class:`StreamEvent` increments — new tokens per live request,
+    finish events carrying the :class:`Result` — that accrued in it.
+
+    One sync interval = admit waiting requests into free slots, map
+    page capacity (may preempt, exactly as before), then ONE device
+    dispatch: either the plain K-step decode burst, or — when a prompt
+    is mid-prefill — the prefill-FUSED burst (``fused.
+    make_prefill_burst``): one prompt chunk, on-device token-0
+    activation if it was the final chunk, and the K decode steps, all
+    without an intermediate host sync.  That fusion is the sync-floor
+    fix: prefill-heavy load used to clamp bursts to K=1 (one blocking
+    readback per decoded token); now a chunk rides along and
+    ``stats["device_steps"] / stats["host_syncs"]`` stays at the burst
+    level under mixed load.
+
+    Token streams are bit-identical to the pre-session loop: admission
+    order, burst length and preemption timing can move WHEN a token is
+    computed, but the per-(uid, step) key contract fixes WHICH token
+    every draw yields.
+    """
+
+    def __init__(self, engine: ServeEngine, seed: int = 0,
+                 max_waiting: Optional[int] = None):
+        from repro.serve.scheduler import Scheduler
+
+        self.engine = engine
+        engine.pool.reset()
+        self.sched = Scheduler(engine.pool, engine.max_batch,
+                               max_waiting=max_waiting)
+        self.base_key = jax.random.key(seed)
+        self._emitted: Dict[int, int] = {}    # uid -> tokens delivered
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        """Queue a request (join-at-prefill happens at the next step).
+        Raises ``ValueError`` on a request that can never fit and
+        ``scheduler.QueueFull`` past the ``max_waiting`` depth cap."""
+        if len(req.prompt) + req.max_new_tokens > self.engine.max_len:
+            raise ValueError(f"request {req.uid} exceeds max_len")
+        return self.sched.submit(req)
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    @property
+    def depth(self) -> int:
+        """Requests in flight (waiting + slotted) — the router's
+        least-loaded signal."""
+        return len(self.sched.waiting) + len(self.sched.running)
+
+    # ----------------------------------------------------- event helpers
+    def _event(self, seq) -> Optional[StreamEvent]:
+        from repro.serve.scheduler import SeqState
+
+        sent = self._emitted.get(seq.req.uid, 0)
+        new = [int(t) for t in seq.tokens[sent:]]
+        fin = seq.state is SeqState.FINISHED
+        if not new and not fin:
+            return None
+        self._emitted[seq.req.uid] = sent + len(new)
+        result = None
+        if fin:
+            self._emitted.pop(seq.req.uid, None)
+            result = Result(uid=seq.req.uid,
+                            tokens=np.asarray(seq.tokens, np.int32),
+                            prompt_len=len(seq.req.prompt),
+                            decode_steps=seq.occupied_steps,
+                            preemptions=seq.preemptions)
+        return StreamEvent(uid=seq.req.uid, tokens=new, finished=fin,
+                           result=result)
+
+    # ------------------------------------------------- one sync interval
+    def step(self) -> List[StreamEvent]:
+        from repro.serve.scheduler import SeqState
+
+        eng, sched, pool = self.engine, self.sched, self.engine.pool
+        events: List[StreamEvent] = []
+        # 1) join-at-prefill: new requests take free slots/pages now
+        #    (recurrent-state slot rows reset to the init state —
+        #    stale state can't mask by length like pages do)
+        for seq in sched.admit():
+            if seq.req.max_new_tokens <= 0:       # nothing to emit
+                sched.finish(seq)
+                ev = self._event(seq)
+                if ev is not None:
+                    events.append(ev)
+                continue
+            if eng.state_pool is not None:
+                pool.kv = eng.state_pool.reset_slot(pool.kv, seq.slot)
+        if sched.next_prefill() is None and not sched.decoding():
+            return events                          # blocked on slots/pages
+        # 2) page capacity for this interval's first write (may preempt
+        #    — the same single-step guarantee as the per-step loop)
+        sched.ensure_decode_capacity()
+        running = sched.decoding()
+        pseq = sched.next_prefill()
+        if pseq is None and not running:
+            return events
+        # 3) burst length: steps_per_sync clamped to the longest
+        #    possible remaining emission and to the page capacity the
+        #    pool can map WITHOUT preempting (lookahead only ever
+        #    shortens the burst)
+        plen = len(pseq.req.prompt) if pseq is not None else 0
+        will_activate = (pseq is not None
+                         and pseq.n_prefilled + eng.chunk_size >= plen)
+        k = 1
+        if running:
+            k = min(eng.steps_per_sync,
+                    max(s.req.max_new_tokens - len(s.tokens)
+                        for s in running))
+        can_decode = True
+        if will_activate:
+            k = max(k, min(eng.steps_per_sync,
+                           max(1, pseq.req.max_new_tokens - 1)))
+        if pseq is not None and k > 1:
+            # ramp-up throttle: while MORE prompt work is queued and the
+            # batch still has room, decode-ahead is a false economy — a
+            # long burst burns the current (small) running set's tokens
+            # at low occupancy while the prompts that would have filled
+            # the batch sit waiting, so short requests serialize.  Clamp
+            # to one fused decode step (still chunk+decode in ONE sync)
+            # and let activations accumulate; once the batch is full —
+            # the oversubscribed steady state — or this is the last
+            # queued chunk, full bursts resume with the chunk riding
+            # along (the sync-floor fix proper).
+            chunks_left = -(-(plen - pseq.n_prefilled) // eng.chunk_size)
+            backlog = (chunks_left > 1
+                       or any(s is not pseq and s.state is SeqState.PREFILL
+                              for s in sched.running)
+                       or len(sched.waiting) > 0)
+            room = (len(running) + (1 if will_activate else 0)
+                    < eng.max_batch)
+            if backlog and room:
+                k = 1
+        if will_activate:
+            # the chunk is the request's last: the burst activates it on
+            # device — pre-position its write head for the page math
+            pseq.n_written = plen
+            k, can_decode = sched.extend_with_activation(max(1, k), pseq)
+        elif running:
+            k = sched.extend_decode_capacity(max(1, k))
+        k = max(1, k)
+        # 4) ONE device dispatch for the whole interval: decode burst,
+        #    with this interval's prefill chunk fused in front when a
+        #    prompt is streaming in
+        state = fused.init_burst_state(eng.max_batch, eng._ring)
+        for s in running:
+            state["tok"][s.slot] = s.tokens[-1]
+            state["pos"][s.slot] = s.n_written
+            state["uid"][s.slot] = s.req.uid
+            state["n_tok"][s.slot] = len(s.tokens)
+            state["max_new"][s.slot] = s.req.max_new_tokens
+        state["steps_left"] = np.asarray(k, np.int32)
+        if eng._state_shardings is not None:
+            state = jax.device_put(state, eng._state_shardings)
+        t0 = time.monotonic()
+        if pseq is not None:
+            start = pseq.n_prefilled
+            chunk = np.zeros((1, eng.chunk_size), np.int32)
+            piece = pseq.req.prompt[start:start + eng.chunk_size]
+            chunk[0, :len(piece)] = piece
+            p = {"tokens": jnp.asarray(chunk),
+                 "start": jnp.asarray(start, jnp.int32),
+                 "length": jnp.asarray(plen, jnp.int32),
+                 "slot": jnp.asarray(pseq.slot, jnp.int32),
+                 "uid": jnp.asarray(pseq.req.uid, jnp.int32),
+                 "max_new": jnp.asarray(pseq.req.max_new_tokens, jnp.int32),
+                 "pos0": jnp.asarray(plen if can_decode else -1, jnp.int32)}
+            pool.kv, state = eng._prefill_burst(
+                eng.params, pool.kv, pool.tables_device(), state,
+                self.base_key, p)
+            pseq.n_prefilled = min(start + eng.chunk_size, plen)
+            pseq.occupied_steps += 1
+            eng.stats["prefill_chunks"] += 1
+        else:
+            pool.kv, state = eng._burst(
+                eng.params, pool.kv, pool.tables_device(), state,
+                self.base_key)
+        st = jax.device_get(state)        # the ONE host sync per interval
+        eng.stats["decode_wall_s"] += time.monotonic() - t0
+        eng.stats["host_syncs"] += 1
+        eng.stats["device_steps"] += k - int(st["steps_left"])
+        # 5) advance / retire from the packed state blob
+        live = list(running)
+        if will_activate:
+            pseq.state = SeqState.RUNNING
+            live.append(pseq)
+        for s in live:
+            n = int(st["n_out"][s.slot])
+            if n:
+                s.tokens.extend(int(t) for t in st["out"][s.slot, :n])
+                # the activated request's token 0 rode the chunk — only
+                # its remaining n-1 tokens took decode writes
+                adv = n - 1 if (will_activate and s is pseq) else n
+                s.n_written += adv
+                s.occupied_steps += adv
+            if bool(st["done"][s.slot]):
+                sched.finish(s)
+            ev = self._event(s)
+            if ev is not None:
+                events.append(ev)
+        eng.stats["tokens"] += sum(len(e.tokens) for e in events)
+        return events

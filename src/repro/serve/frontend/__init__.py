@@ -1,0 +1,35 @@
+"""Async serving front end over the continuous-batching engine.
+
+  protocol   wire objects: CompletionRequest/Chunk/Response + SSE
+             framing — shared by the HTTP server AND the batch CLI
+  replica    one ServeEngine session on a worker thread: thread-safe
+             submit, callback token delivery, drain/health/load
+  router     least-loaded dispatch over N data-parallel replicas,
+             QueueFull failover, drain-on-shutdown
+  server     stdlib-asyncio HTTP/1.1: POST /v1/completions (JSON or
+             SSE streaming), /healthz, /stats; 429 backpressure
+
+See docs/serving_frontend.md for the API surface and contracts.
+"""
+
+from repro.serve.frontend.protocol import (CompletionChunk,
+                                           CompletionRequest,
+                                           CompletionResponse, sse_decode,
+                                           sse_encode, to_engine_request)
+from repro.serve.frontend.replica import Replica, ReplicaDraining
+from repro.serve.frontend.router import Router
+from repro.serve.frontend.server import Server, run_server
+
+__all__ = [
+    "CompletionChunk",
+    "CompletionRequest",
+    "CompletionResponse",
+    "Replica",
+    "ReplicaDraining",
+    "Router",
+    "Server",
+    "run_server",
+    "sse_decode",
+    "sse_encode",
+    "to_engine_request",
+]

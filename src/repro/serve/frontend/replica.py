@@ -1,0 +1,174 @@
+"""One serving replica: a ContinuousSession driven by a worker thread.
+
+The engine's step loop is synchronous and device-bound; the HTTP server
+is an asyncio event loop.  A :class:`Replica` bridges them with the
+smallest possible surface: a dedicated worker thread owns the session
+and runs ``step()`` whenever there is work, and every public method is
+safe to call from any thread (one mutex guards the scheduler state; the
+worker holds it across a step, so a concurrent ``submit`` lands between
+sync intervals — exactly where the engine admits anyway).
+
+Delivery is callback-based: ``submit(req, on_event)`` registers a
+per-request callback that the WORKER thread invokes with each
+:class:`StreamEvent` (new tokens only — the session already suppresses
+preemption replays).  The asyncio server wraps its callback with
+``loop.call_soon_threadsafe``; the batch path just appends to a list.
+
+Backpressure is synchronous: ``submit`` raises ``scheduler.QueueFull``
+in the caller's thread when the wait queue is at its depth cap, so the
+server can answer 429 without a round trip through the worker.
+
+Lifecycle: a replica is born accepting.  ``drain()`` stops intake
+(``ReplicaDraining`` on submit) but finishes everything in flight, then
+parks the worker — the router's rolling-shutdown building block.
+``close()`` abandons in-flight work (tests / hard shutdown only).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.engine import Request, ServeEngine, StreamEvent
+from repro.serve.frontend.protocol import (CompletionRequest,
+                                           CompletionResponse,
+                                           to_engine_request)
+
+# a replica whose worker hasn't completed a step (or an idle check) in
+# this long while work is pending is reported unhealthy
+HEALTH_STALL_S = 60.0
+
+
+class ReplicaDraining(RuntimeError):
+    """Raised by :meth:`Replica.submit` after :meth:`Replica.drain` —
+    the replica finishes in-flight work but accepts nothing new."""
+
+
+class Replica:
+    def __init__(self, engine: ServeEngine, name: str = "r0",
+                 seed: int = 0, max_waiting: Optional[int] = None):
+        # NOTE: router parity contract — every replica must be built
+        # with the same seed, so a request's stream is bit-identical
+        # regardless of which replica serves it (per-(uid, step) keys).
+        self.name = name
+        self.engine = engine
+        self.session = engine.session(seed=seed, max_waiting=max_waiting)
+        self._lock = threading.Lock()
+        self._subs: Dict[int, Callable[[StreamEvent], None]] = {}
+        self._wake = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._draining = False
+        self._closed = False
+        self.last_step = time.monotonic()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"replica-{name}")
+        self._thread.start()
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request,
+               on_event: Callable[[StreamEvent], None]) -> None:
+        """Queue a request; ``on_event`` fires from the worker thread
+        with each incremental :class:`StreamEvent`.  Raises
+        ``QueueFull`` (depth cap), ``ValueError`` (can never fit) or
+        :class:`ReplicaDraining` — all synchronously."""
+        if self._draining or self._closed:
+            raise ReplicaDraining(f"replica {self.name} is draining")
+        with self._lock:
+            if req.uid in self._subs:
+                raise ValueError(f"uid {req.uid} already in flight")
+            self.session.submit(req)     # may raise QueueFull/ValueError
+            self._subs[req.uid] = on_event
+        self._idle.clear()
+        self._wake.set()
+
+    @property
+    def load(self) -> int:
+        """Requests in flight (the router's least-loaded signal)."""
+        return self.session.depth
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @property
+    def healthy(self) -> bool:
+        """Worker alive and not stalled mid-step."""
+        if self._closed or not self._thread.is_alive():
+            return False
+        return time.monotonic() - self.last_step < HEALTH_STALL_S
+
+    def stats(self) -> Dict[str, float]:
+        return dict(self.engine.stats)
+
+    # ------------------------------------------------------------ worker
+    def _run(self) -> None:
+        while not self._closed:
+            with self._lock:
+                busy = self.session.has_work()
+                events: List[StreamEvent] = (self.session.step()
+                                             if busy else [])
+                subs = [(self._subs.get(ev.uid), ev) for ev in events]
+                for ev in events:
+                    if ev.finished:
+                        self._subs.pop(ev.uid, None)
+            self.last_step = time.monotonic()
+            for cb, ev in subs:
+                if cb is not None:
+                    cb(ev)
+            if not busy:
+                self._idle.set()
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    # --------------------------------------------------------- lifecycle
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Stop intake, finish in-flight requests, park the worker.
+        Returns True once idle (False on timeout — work still live)."""
+        self._draining = True
+        self._wake.set()
+        done = self._idle.wait(timeout=timeout)
+        if done:
+            self._closed = True
+            self._wake.set()
+            self._thread.join(timeout=5.0)
+        return done
+
+    def close(self) -> None:
+        """Hard stop: the worker exits after its current step; in-flight
+        requests are abandoned (their callbacks never complete)."""
+        self._draining = True
+        self._closed = True
+        self._wake.set()
+        self._thread.join(timeout=5.0)
+
+    # ----------------------------------------------------- batch client
+    def complete(self, creqs: List[CompletionRequest],
+                 uid_start: int = 0) -> List[CompletionResponse]:
+        """Blocking convenience used by the batch CLI path: run wire
+        requests through the SAME submit/stream machinery the server
+        uses and collect terminal responses (uid order)."""
+        done = threading.Event()
+        out: Dict[int, CompletionResponse] = {}
+        remaining = len(creqs)
+        lock = threading.Lock()
+
+        def make_cb(uid: int):
+            def cb(ev: StreamEvent) -> None:
+                nonlocal remaining
+                if not ev.finished:
+                    return
+                with lock:
+                    out[uid] = CompletionResponse.from_result(
+                        ev.result, replica=self.name)
+                    remaining -= 1
+                    if remaining == 0:
+                        done.set()
+            return cb
+
+        for i, creq in enumerate(creqs):
+            uid = creq.uid if creq.uid is not None else uid_start + i
+            self.submit(to_engine_request(creq, uid), make_cb(uid))
+        done.wait()
+        return [out[k] for k in sorted(out)]

@@ -1,0 +1,131 @@
+"""Least-loaded router over N data-parallel ServeEngine replicas.
+
+Topology (docs/serving_frontend.md): every replica holds a full copy of
+the (pruned) model and its own paged KV pool / session / worker thread;
+the router owns uid assignment and dispatch.  Dispatch is least-loaded
+over HEALTHY replicas (ties broken by replica order, so a single
+replica degenerates to plain pass-through); a replica whose wait queue
+is at its depth cap makes ``submit`` raise ``QueueFull`` and the router
+fails over to the next-least-loaded one, raising only when EVERY
+healthy replica is full — that terminal ``QueueFull`` is the server's
+429.
+
+Parity contract: replicas are built with one shared seed, and sampling
+is keyed per (uid, step) inside the engine — a request's token stream
+is bit-identical no matter which replica serves it, so least-loaded
+placement is purely a latency decision.
+
+``drain()`` is the rolling-shutdown primitive: stop intake everywhere,
+wait for in-flight requests to finish, park the workers.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.engine import StreamEvent
+from repro.serve.frontend.protocol import (CompletionRequest,
+                                           CompletionResponse,
+                                           to_engine_request)
+from repro.serve.frontend.replica import Replica, ReplicaDraining
+from repro.serve.scheduler import QueueFull
+
+
+class Router:
+    def __init__(self, replicas: List[Replica]):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        self.replicas = list(replicas)
+        self._uids = itertools.count()
+        self._uid_lock = threading.Lock()
+
+    # --------------------------------------------------------- dispatch
+    def _candidates(self) -> List[Replica]:
+        up = [r for r in self.replicas if r.healthy]
+        if not up:
+            if any(r.draining for r in self.replicas):
+                raise ReplicaDraining("all replicas draining")
+            raise RuntimeError("no healthy replicas")
+        return sorted(up, key=lambda r: r.load)
+
+    def assign_uid(self, creq: CompletionRequest) -> int:
+        if creq.uid is not None:
+            return creq.uid
+        with self._uid_lock:
+            return next(self._uids)
+
+    def submit(self, creq: CompletionRequest,
+               on_event: Callable[[StreamEvent], None],
+               uid: Optional[int] = None) -> Replica:
+        """Place one wire request on the least-loaded healthy replica,
+        failing over across full ones.  Returns the replica that took
+        it; raises ``QueueFull`` when every healthy replica is at its
+        depth cap (HTTP 429) and ``ValueError`` on an unservable
+        request."""
+        if uid is None:
+            uid = self.assign_uid(creq)
+        req = to_engine_request(creq, uid)
+        last: Optional[Exception] = None
+        for rep in self._candidates():
+            try:
+                rep.submit(req, on_event)
+                return rep
+            except (QueueFull, ReplicaDraining) as e:
+                last = e
+        raise QueueFull(f"all replicas at capacity ({last})")
+
+    # ----------------------------------------------------- batch client
+    def complete(self, creqs: List[CompletionRequest]
+                 ) -> List[CompletionResponse]:
+        """Blocking batch entry point (the CLI's code path): stream all
+        requests through the replicas, return terminal responses in uid
+        order."""
+        done = threading.Event()
+        out: Dict[int, CompletionResponse] = {}
+        lock = threading.Lock()
+        names: Dict[int, str] = {}
+        remaining = len(creqs)
+        if not remaining:
+            return []
+
+        def make_cb(uid: int):
+            def cb(ev: StreamEvent) -> None:
+                nonlocal remaining
+                if not ev.finished:
+                    return
+                with lock:
+                    out[uid] = CompletionResponse.from_result(
+                        ev.result, replica=names.get(uid))
+                    remaining -= 1
+                    if remaining == 0:
+                        done.set()
+            return cb
+
+        for creq in creqs:
+            uid = self.assign_uid(creq)
+            rep = self.submit(creq, make_cb(uid), uid=uid)
+            names[uid] = rep.name
+        done.wait()
+        return [out[k] for k in sorted(out)]
+
+    # --------------------------------------------------------- lifecycle
+    def health(self) -> Dict[str, Dict[str, float]]:
+        return {r.name: {"healthy": r.healthy, "load": r.load}
+                for r in self.replicas}
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        return {r.name: r.stats() for r in self.replicas}
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Stop intake on every replica, then wait for all in-flight
+        work to finish.  True only if every replica went idle."""
+        ok = True
+        for r in self.replicas:
+            ok = r.drain(timeout=timeout) and ok
+        return ok
+
+    def close(self) -> None:
+        for r in self.replicas:
+            r.close()

@@ -22,6 +22,14 @@ module moves the whole inner loop on device:
     ``n_tok``/``max_new``/``done`` + a token output ring) as device
     arrays.  The host syncs ONCE per burst, reading back the small
     packed state blob instead of per-step logits.
+  - :func:`make_prefill_burst` — the sync-floor fix (ISSUE-6): ONE
+    prompt chunk (``LM.prefill_chunk``) fused in front of the same
+    K-step decode loop.  A final chunk samples token 0 under the
+    per-(uid, 0) key and *activates its slot on device* (tok/pos/uid/
+    ring fields set where ``is_final``), so the newly-running request
+    decodes in the very same burst — prefill-heavy load no longer
+    clamps bursts to K=1, and a mixed chunk+decode interval costs one
+    dispatch and one host sync instead of two dispatches at K=1.
   - :func:`make_static_burst` — the static-bucket twin: dense-cache
     decode + batch-keyed sampling + done bookkeeping fused into one
     while_loop (or, when EOS is off and every request shares one
@@ -102,7 +110,9 @@ def init_burst_state(max_batch: int, ring: int) -> Dict[str, np.ndarray]:
     """Host template of the device-resident scheduler state.  All slots
     start idle (``pos`` -1); the engine fills the running slots before
     each burst.  ``out`` is the token output ring — ``ring`` must be
-    ≥ the burst length so every emitted token has a cell."""
+    ≥ the burst length + 1 so every emitted token has a cell (the +1 is
+    the slot a prefill-fused burst activates mid-interval: token 0 from
+    the final chunk, then up to a full burst of decode tokens)."""
     return {
         "tok": np.zeros((max_batch,), np.int32),
         "pos": np.full((max_batch,), -1, np.int32),     # -1 = idle slot
@@ -116,29 +126,23 @@ def init_burst_state(max_batch: int, ring: int) -> Dict[str, np.ndarray]:
     }
 
 
-def make_continuous_burst(model, page_size: int, *, temperature: float,
-                          top_k: Optional[int], top_p: Optional[float],
-                          eos_id: Optional[int]):
-    """Build the jitted K-step continuous-decode burst.
+def _make_decode_loop(model, page_size: int, *, temperature: float,
+                      top_k: Optional[int], top_p: Optional[float],
+                      eos: int):
+    """The K-step fused decode ``while_loop`` — the single body behind
+    :func:`make_continuous_burst` and :func:`make_prefill_burst`.
 
-    ``burst(params, kv, tables, state, base_key) -> (kv, state)`` runs
-    up to ``state["steps_left"]`` fused decode steps entirely on device
-    (early-exiting when every slot goes idle), donating the paged cache.
-    The burst length is a *dynamic* field of the state blob, so one
-    compiled body serves every ``steps_per_sync`` setting — which is
-    also what makes K=1 and K=8 token streams trivially bit-identical.
+    ``loop(params, kv, tables, state, base_key) -> (kv, state)`` runs up
+    to ``state["steps_left"]`` fused decode steps (early-exiting when
+    every slot goes idle).  Per step: ``decode_step(paged=...)`` writes
+    this token's KV / advances the state rows and yields logits;
+    :func:`sample_rows` draws the next token under the per-(uid, step)
+    key; the token is recorded into the output ring; EOS / ``max_new``
+    mark the slot done (``pos`` frozen to -1 — its remaining burst
+    steps treat it idle, exactly like a retired slot awaiting
+    re-admission); live slots advance ``pos``."""
 
-    Per fused step: ``decode_step(paged=...)`` writes this token's KV /
-    advances the state rows and yields logits; :func:`sample_rows`
-    draws the next token under the per-(uid, step) key; the token is
-    recorded into the output ring; EOS / ``max_new`` mark the slot done
-    (``pos`` frozen to -1 — its remaining burst steps treat it idle,
-    exactly like a retired slot awaiting re-admission); live slots
-    advance ``pos``.  The host retires done slots at the next sync.
-    """
-    eos = -1 if eos_id is None else int(eos_id)   # -1 never matches a token
-
-    def burst(params, kv, tables, state, base_key):
+    def loop(params, kv, tables, state, base_key):
         def cond(carry):
             _, st = carry
             return (st["steps_left"] > 0) & jnp.any(st["pos"] >= 0)
@@ -174,7 +178,94 @@ def make_continuous_burst(model, page_size: int, *, temperature: float,
 
         return jax.lax.while_loop(cond, body, (kv, state))
 
-    return jax.jit(burst, donate_argnums=(1,))
+    return loop
+
+
+def make_continuous_burst(model, page_size: int, *, temperature: float,
+                          top_k: Optional[int], top_p: Optional[float],
+                          eos_id: Optional[int]):
+    """Build the jitted K-step continuous-decode burst.
+
+    ``burst(params, kv, tables, state, base_key) -> (kv, state)`` runs
+    up to ``state["steps_left"]`` fused decode steps entirely on device
+    (early-exiting when every slot goes idle), donating the paged cache.
+    The burst length is a *dynamic* field of the state blob, so one
+    compiled body serves every ``steps_per_sync`` setting — which is
+    also what makes K=1 and K=8 token streams trivially bit-identical.
+    The host retires done slots at the next sync (see
+    :func:`_make_decode_loop` for the per-step semantics).
+    """
+    eos = -1 if eos_id is None else int(eos_id)   # -1 never matches a token
+    loop = _make_decode_loop(model, page_size, temperature=temperature,
+                             top_k=top_k, top_p=top_p, eos=eos)
+    return jax.jit(loop, donate_argnums=(1,))
+
+
+def make_prefill_burst(model, page_size: int, chunk_size: int, *,
+                       temperature: float, top_k: Optional[int],
+                       top_p: Optional[float], eos_id: Optional[int]):
+    """Build the jitted prefill-chunk + K-step decode burst — the
+    sync-floor fix.
+
+    ``pburst(params, kv, tables, state, base_key, p) -> (kv, state)``
+    feeds ONE fixed-size chunk of one request's prompt through
+    ``LM.prefill_chunk`` and then runs the same fused decode loop as
+    :func:`make_continuous_burst`, all in one dispatch / one host sync.
+    ``p`` carries the chunk: ``tokens`` (1, C), scalars ``start`` /
+    ``length`` / ``slot`` / ``uid`` / ``max_new``, and ``pos0`` — the
+    activation write position (the prompt length), or -1 when the host
+    could not map a page for the slot's first decode write (the slot
+    then activates *frozen*: token 0 is still recorded, decode waits
+    for the next sync's capacity pass, exactly like per-step mode).
+
+    On the FINAL chunk (``start + C >= length``, decided on device) the
+    slot is activated in the state blob: token 0 is sampled from the
+    chunk's last-position logits under the per-(uid, 0) key — the very
+    same draw the host-side path made — recorded into the output ring,
+    and the slot's ``tok``/``pos``/``uid``/``n_tok``/``max_new`` fields
+    are set so the decode loop picks the request up on its first
+    iteration.  EOS / ``max_new <= 1`` on token 0 mark the slot done
+    immediately.  Non-final chunks touch no state and the decode loop
+    serves the already-running slots for the full burst — prefill-heavy
+    load no longer clamps bursts to K=1.
+    """
+    eos = -1 if eos_id is None else int(eos_id)
+    loop = _make_decode_loop(model, page_size, temperature=temperature,
+                             top_k=top_k, top_p=top_p, eos=eos)
+
+    def pburst(params, kv, tables, state, base_key, p):
+        slot = p["slot"]
+        bt = jax.lax.dynamic_slice_in_dim(tables, slot, 1, axis=0)
+        logits, kv = model.prefill_chunk(
+            params, {"tokens": p["tokens"]}, kv, p["start"], p["length"],
+            slot, bt, page_size=page_size)
+        # token 0: the final chunk's last-position logits, drawn under
+        # the per-(uid, step=0) key — sample_rows is the single
+        # implementation shared with the decode loop and the old
+        # host-side draw (garbage on non-final chunks, never recorded)
+        tok0 = sample_rows(
+            logits, jnp.reshape(p["uid"], (1,)), jnp.zeros((1,), jnp.int32),
+            base_key, temperature=temperature, top_k=top_k, top_p=top_p)[0]
+        is_final = p["start"] + chunk_size >= p["length"]
+        done0 = (tok0 == eos) | (p["max_new"] <= 1)
+
+        def act(arr, val):
+            return arr.at[slot].set(
+                jnp.where(is_final, val, arr[slot]).astype(arr.dtype))
+
+        state = dict(state)
+        state["tok"] = act(state["tok"], tok0)
+        state["pos"] = act(state["pos"], jnp.where(done0, -1, p["pos0"]))
+        state["uid"] = act(state["uid"], p["uid"])
+        state["n_tok"] = act(state["n_tok"], 1)
+        state["max_new"] = act(state["max_new"], p["max_new"])
+        state["done"] = act(state["done"], done0)
+        state["out"] = state["out"].at[slot, 0].set(
+            jnp.where(is_final, tok0, state["out"][slot, 0]))
+        state["n_out"] = act(state["n_out"], 1)
+        return loop(params, kv, tables, state, base_key)
+
+    return jax.jit(pburst, donate_argnums=(1,))
 
 
 # ----------------------------------------------------------------------

@@ -21,17 +21,34 @@ it re-queues at the front) when the pool is exhausted; (3) **retires**
 requests at EOS / ``max_new_tokens``, recycling slot and pages
 immediately.
 
+Admission order is **SLA-aware** (docs/serving_frontend.md): the wait
+queue sorts by ``(-priority, deadline, arrival)`` — higher
+``Request.priority`` first, earlier ``Request.deadline`` first within a
+priority class, submission order last — and degenerates to exact FIFO
+when neither field is set.  The queue *head* still blocks admission
+when the pool can't back its prompt (no bypass within the order, so a
+large request cannot be starved by small ones behind it).  A
+``max_waiting`` depth cap makes ``submit`` raise :class:`QueueFull`
+instead of buffering unboundedly — the serving front end maps that to
+HTTP 429 backpressure.  Preemption re-queues are exempt from the cap
+(the request already holds its place) and re-enter with their original
+arrival number, so a victim resumes ahead of everything submitted after
+it.
+
 Sampling in the engine is keyed per (request uid, step), so a preempted
 request's recompute reproduces its original tokens exactly — preemption
-is a capacity event, never a quality event.
+is a capacity event, never a quality event — and admission *order*
+(priority vs FIFO) can move when a request runs but never which tokens
+it gets.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from collections import deque
-from typing import Deque, List, Optional
+import heapq
+import itertools
+from typing import List, Optional, Tuple
 
 from repro.serve.kvpool import PagedKVPool
 
@@ -41,6 +58,12 @@ class SeqState(enum.Enum):
     PREFILL = "prefill"
     RUNNING = "running"
     FINISHED = "finished"
+
+
+class QueueFull(RuntimeError):
+    """Raised by :meth:`Scheduler.submit` when the wait queue is at its
+    ``max_waiting`` depth cap — the backpressure signal the serving
+    front end turns into HTTP 429."""
 
 
 @dataclasses.dataclass
@@ -55,23 +78,72 @@ class Sequence:
     tokens: List[int] = dataclasses.field(default_factory=list)
     occupied_steps: int = 0     # steps while slotted (chunks + decodes)
     preemptions: int = 0
+    arrival: int = 0            # submission order (keeps sort stable;
+    #                             preserved across preemption re-queue)
+
+    def sort_key(self) -> Tuple[float, float, int]:
+        pr = getattr(self.req, "priority", 0) or 0
+        dl = getattr(self.req, "deadline", None)
+        return (-pr, dl if dl is not None else float("inf"), self.arrival)
+
+
+class _WaitQueue:
+    """Priority/deadline/arrival-ordered wait queue.
+
+    Exposes the small surface the scheduler (and its tests) use:
+    truthiness/len, ``q[0]`` (the head — the next request admission will
+    consider), pop-head, and ordered iteration.  All-default requests
+    sort purely by arrival, i.e. exact FIFO.
+    """
+
+    def __init__(self):
+        self._heap: List[Tuple[Tuple[float, float, int], int, Sequence]] = []
+        self._tie = itertools.count()
+
+    def push(self, seq: Sequence) -> None:
+        heapq.heappush(self._heap, (seq.sort_key(), next(self._tie), seq))
+
+    def pop(self) -> Sequence:
+        return heapq.heappop(self._heap)[-1]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __getitem__(self, i: int) -> Sequence:
+        if i == 0:
+            return self._heap[0][-1]
+        return sorted(self._heap)[i][-1]
+
+    def __iter__(self):
+        return (e[-1] for e in sorted(self._heap))
 
 
 class Scheduler:
-    def __init__(self, pool: PagedKVPool, max_slots: int):
+    def __init__(self, pool: PagedKVPool, max_slots: int,
+                 max_waiting: Optional[int] = None):
         self.pool = pool
         self.max_slots = max_slots
-        self.waiting: Deque[Sequence] = deque()
+        self.max_waiting = max_waiting
+        self.waiting = _WaitQueue()
         # admission-ordered (PREFILL + RUNNING): append on admit, remove
         # on finish/preempt — running[-1] is always the youngest (the
         # preemption victim)
         self.running: List[Sequence] = []
         self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._arrivals = itertools.count()
 
     # ------------------------------------------------------------ intake
     def submit(self, req) -> Sequence:
-        seq = Sequence(req=req)
-        self.waiting.append(seq)
+        if (self.max_waiting is not None
+                and len(self.waiting) >= self.max_waiting):
+            raise QueueFull(
+                f"wait queue at its depth cap ({self.max_waiting}) — "
+                f"retry later")
+        seq = Sequence(req=req, arrival=next(self._arrivals))
+        self.waiting.push(seq)
         return seq
 
     def has_work(self) -> bool:
@@ -83,10 +155,12 @@ class Scheduler:
 
     def admit(self) -> List[Sequence]:
         """Join-at-prefill: move waiting requests into free slots while
-        the pool can back their prompts.  FIFO — the queue head blocking
-        on pages stalls admission (no head-of-line bypass, so a large
-        request cannot starve).  Admitted requests enter PREFILL; the
-        engine feeds their prompt chunks."""
+        the pool can back their prompts, in wait-queue order —
+        (-priority, deadline, arrival), exact FIFO when neither SLA
+        field is set.  The queue head blocking on pages stalls admission
+        (no head-of-line bypass within the order, so a large request
+        cannot starve).  Admitted requests enter PREFILL; the engine
+        feeds their prompt chunks."""
         admitted: List[Sequence] = []
         while self.waiting and self._free_slots:
             seq = self.waiting[0]
@@ -99,7 +173,7 @@ class Scheduler:
             pages = self.pool.alloc(need)
             if pages is None:
                 break
-            self.waiting.popleft()
+            self.waiting.pop()
             seq.slot = self._free_slots.pop()
             self.pool.assign(seq.slot, pages)
             seq.state = SeqState.PREFILL
@@ -162,40 +236,87 @@ class Scheduler:
         No-op (full ``k``) for pure recurrent-state archs."""
         if not self.pool.has_kv_pages:
             return k
-        ps = self.pool.page_size
         decoding = [s for s in self.running
                     if s.state is SeqState.RUNNING]
+        k_safe, _ = self._extend(k, decoding, activating=None)
+        return k_safe
+
+    def extend_with_activation(self, k: int, activating: Sequence
+                               ) -> Tuple[int, bool]:
+        """Burst lookahead when this interval's prefill chunk is the
+        request's FINAL one (the prefill-fused burst, docs/serving.md):
+        size and map pages as :meth:`extend_decode_capacity` does, but
+        with the about-to-activate request in the decoding set — it
+        samples token 0 from the chunk logits (no page needed) and then
+        decodes alongside everyone else.  The engine must have set its
+        ``n_written`` to the prompt length already.
+
+        Returns ``(k_safe, can_decode)``.  ``can_decode`` is False when
+        even one decode write for the activating slot cannot be backed
+        — running requests have their step-one page guaranteed by
+        :meth:`ensure_decode_capacity`, the activating one does not —
+        in which case the slot activates *frozen* (``pos0`` -1): it
+        keeps token 0 and waits for the next sync's capacity pass, the
+        same outcome per-step mode reaches one step later.  Still never
+        preempts."""
+        if not self.pool.has_kv_pages:
+            return k, True
+        decoding = [s for s in self.running
+                    if s.state is SeqState.RUNNING]
+        return self._extend(k, decoding, activating)
+
+    def _extend(self, k: int, decoding: List[Sequence],
+                activating: Optional[Sequence]) -> Tuple[int, bool]:
+        ps = self.pool.page_size
+        if activating is not None:
+            decoding = decoding + [activating]
 
         def extra_pages(seq: Sequence, kk: int) -> int:
-            want = min(kk, seq.req.max_new_tokens - len(seq.tokens))
+            # tokens already drawn: the activating seq's token 0 comes
+            # from the chunk logits this burst, before any decode write
+            drawn = len(seq.tokens) + (1 if seq is activating else 0)
+            want = max(0, min(kk, seq.req.max_new_tokens - drawn))
             need = -(-(seq.n_written + want) // ps)
             return max(0, need - self.pool.slot_page_count(seq.slot))
 
+        def total(kk: int) -> int:
+            return sum(extra_pages(s, kk) for s in decoding)
+
         k_safe = k
-        while k_safe > 1 and (sum(extra_pages(s, k_safe)
-                                  for s in decoding)
-                              > self.pool.free_pages):
+        while k_safe > 1 and total(k_safe) > self.pool.free_pages:
             k_safe -= 1
+        can_decode = True
+        if (activating is not None and total(k_safe)
+                > self.pool.free_pages):
+            # k_safe == 1 and even that overdraws: the running seqs'
+            # step-one pages are guaranteed, the activation's is not —
+            # freeze the new slot instead of overdrawing (or preempting)
+            decoding.remove(activating)
+            can_decode = False
         for seq in decoding:
             n = extra_pages(seq, k_safe)
             if n:
                 self.pool.assign(seq.slot, self.pool.alloc(n))
-        return k_safe
+        return k_safe, can_decode
 
     # --------------------------------------------------------- lifecycle
     def preempt(self, seq: Sequence) -> None:
         """Recompute-style preemption: drop slot+pages+generated tokens
-        and re-queue at the FRONT (deterministic per-uid sampling keys
-        regenerate the identical prefix on re-admission; re-admission
-        also resets any recurrent-state slot rows, so the replayed
-        prefill starts from the same fresh state)."""
+        and re-queue with the ORIGINAL arrival number — within its
+        priority class the victim sorts ahead of everything submitted
+        after it (admission is order-respecting, so that is the front
+        of the queue in the FIFO case; deterministic per-uid sampling
+        keys regenerate the identical prefix on re-admission, and
+        re-admission also resets any recurrent-state slot rows, so the
+        replayed prefill starts from the same fresh state).  Exempt
+        from ``max_waiting`` — the request already holds its place."""
         self._release(seq)
         seq.state = SeqState.WAITING
         seq.n_prefilled = 0
         seq.n_written = 0
         seq.tokens = []
         seq.preemptions += 1
-        self.waiting.appendleft(seq)
+        self.waiting.push(seq)
 
     def finish(self, seq: Sequence) -> None:
         self._release(seq)
