@@ -8,6 +8,10 @@ Gate policy (docs in benchmarks/README.md):
   - **throughput** (any metric named ``tok_s``): HARD failure when the
     current value drops more than ``--threshold`` (default 20%) below
     the baseline — the regression gate;
+  - **prefix reuse** (``prefill_tok_saved_frac`` — fraction of prompt
+    tokens the serve_throughput prefix leg attached from the cache
+    instead of prefilling, ISSUE-7): HARD failure on a >``--threshold``
+    drop (reuse regressed);
   - **step latency** (``step_ms_p50`` — p50 per-fused-decode-step wall
     from serve_throughput): HARD failure when it RISES more than
     ``--threshold`` above baseline (lower is better — the
@@ -32,7 +36,10 @@ import argparse
 import json
 import sys
 
-HARD_METRICS = ("tok_s",)  # higher is better, gated on drops
+# higher is better, gated on drops: throughput everywhere, plus the
+# prefix leg's fraction of prompt tokens served from the prefix cache
+# instead of prefilled (ISSUE-7 — a drop means reuse broke)
+HARD_METRICS = ("tok_s", "prefill_tok_saved_frac")
 # lower is better, gated on rises: p50 fused-step latency (ISSUE-5) and
 # p50 time-to-first-token under the oversubscribed streaming workload
 # (ISSUE-6 — queueing + chunked prefill latency the front end exposes)

@@ -36,9 +36,24 @@ prefill sync-floor fix: the mixed workload keeps prompts streaming in,
 and ``burst`` (fused device steps per host sync) must stay well above 1
 — before prefill was fused into the burst body it clamped to ~1 here.
 
+A fourth leg (``prefix``, ISSUE-7) runs a **prefix-heavy
+oversubscribed** workload — every prompt shares a 48-token system
+prefix with a short unique tail, more requests than slots, and a pool
+tight enough that the no-reuse run must swap-preempt — once with the
+refcounted prefix cache ON and once OFF on the same engine config.
+Greedy tokens must match bit-exact (reuse changes prefill *work*,
+never results); reported: the cached run's ``tok_s``,
+``prefill_tok_saved_frac`` (prefix-attached prompt tokens / total
+prompt tokens — both CI-gated), ``speedup_vs_noprefix``, and the
+host-arena swap traffic of the pressured run (``swap_in_ms_per_page``).
+
+All legs build their engines from one :class:`repro.serve.ServeConfig`
+literal — the same object ``launch/serve.py`` constructs from flags.
+
 The ``metrics`` dicts feed ``BENCH_<sha>.json`` and the CI
-bench-regression gate (benchmarks.gate — ``tok_s`` gates on drops,
-``step_ms_p50`` and ``ttft_ms_p50`` on rises).
+bench-regression gate (benchmarks.gate — ``tok_s`` and
+``prefill_tok_saved_frac`` gate on drops, ``step_ms_p50`` and
+``ttft_ms_p50`` on rises).
 """
 
 from __future__ import annotations
@@ -112,13 +127,14 @@ def _bench_pair(tag: str, model, params, n_requests: int
     from benchmarks.common import BenchResult
     from repro.serve import ServeEngine
 
+    from repro.serve import ServeConfig
+
     reqs = _workload(n_requests, model.cfg.vocab_size)
-    static = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                         mode="static")
-    cont = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                       mode="continuous", page_size=PAGE_SIZE,
-                       prefill_chunk=PREFILL_CHUNK,
-                       steps_per_sync=STEPS_PER_SYNC)
+    config = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                         page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+                         steps_per_sync=STEPS_PER_SYNC)
+    static = ServeEngine(model, params, config, mode="static")
+    cont = ServeEngine(model, params, config, mode="continuous")
     if cont.mode != "continuous":
         raise RuntimeError(f"{tag}: fell back to static — the paged "
                            f"runtime must serve this arch")
@@ -175,11 +191,12 @@ def _bench_streaming(tag: str, model, params, n_requests: int
     from benchmarks.common import BenchResult
     from repro.serve import ServeEngine
 
+    from repro.serve import ServeConfig
+
     reqs = _workload(n_requests, model.cfg.vocab_size)
-    eng = ServeEngine(model, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                      mode="continuous", page_size=PAGE_SIZE,
-                      prefill_chunk=PREFILL_CHUNK,
-                      steps_per_sync=STEPS_PER_SYNC)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_batch=MAX_BATCH, max_len=MAX_LEN, page_size=PAGE_SIZE,
+        prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC))
     eng.generate(reqs)                               # warm the jit caches
     t0 = time.monotonic()
     eng.generate(reqs)
@@ -238,6 +255,77 @@ def _bench_streaming(tag: str, model, params, n_requests: int
         f"burst={burst:.1f}", metrics=m)]
 
 
+# ----------------------------------------------------------- prefix leg
+SHARED_PREFIX = 48             # 3 full pages of system prompt
+TAIL_LEN = 4                   # unique per-request suffix (L = 52)
+PREFIX_MAX_NEWS = (8, 16, 24)  # growth past page 4 → pool pressure
+PREFIX_NUM_PAGES = 14          # capacity 13: the no-reuse run MUST swap
+
+
+def _prefix_workload(n: int, vocab: int) -> List["repro.serve.Request"]:
+    from repro.serve import Request
+
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, vocab, size=SHARED_PREFIX, dtype=np.int32)
+    return [
+        Request(uid=i,
+                prompt=np.concatenate(
+                    [shared, rng.integers(0, vocab, size=TAIL_LEN,
+                                          dtype=np.int32)]),
+                max_new_tokens=PREFIX_MAX_NEWS[i % len(PREFIX_MAX_NEWS)])
+        for i in range(n)
+    ]
+
+
+def _bench_prefix(tag: str, model, params, n_requests: int
+                  ) -> List["BenchResult"]:
+    """Prefix-heavy oversubscribed workload, cache ON vs OFF on one
+    tight-pool config (host-swap arena enabled on both): the OFF run
+    pays full prefill per request and swap-preempts under the page
+    pressure the ON run's sharing avoids."""
+    from benchmarks.common import BenchResult
+    from repro.serve import ServeConfig, ServeEngine
+
+    reqs = _prefix_workload(n_requests, model.cfg.vocab_size)
+    base = ServeConfig(max_batch=4, max_len=80, page_size=PAGE_SIZE,
+                       num_pages=PREFIX_NUM_PAGES,
+                       prefill_chunk=PREFILL_CHUNK,
+                       steps_per_sync=STEPS_PER_SYNC)
+    off = ServeEngine(model, params, base, prefix_cache=False)
+    on = ServeEngine(model, params, base, prefix_cache=True)
+
+    off.generate(reqs)                               # warm the jit caches
+    on.generate(reqs)
+    r_off, off_s, _, _ = _timed_runs(off, reqs)
+    r_on, on_s, _, _ = _timed_runs(on, reqs)
+
+    for a, b in zip(r_off, r_on):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise RuntimeError(
+                f"{tag}: prefix-cache changed greedy tokens for uid "
+                f"{a.uid}: {a.tokens.tolist()} vs {b.tokens.tolist()}")
+
+    toks = sum(len(r.tokens) for r in r_on)
+    tok_s = toks / on_s
+    speedup = tok_s / (toks / off_s)
+    prompt_toks = sum(len(r.prompt) for r in reqs)
+    saved = on.stats["prefix_hit_tokens"] / prompt_toks
+    swap_pages = off.stats["swap_in_pages"]
+    swap_ms = (off.stats["swap_in_wall_s"] * 1e3 / swap_pages
+               if swap_pages else 0.0)
+    m = {"tok_s": tok_s,
+         "prefill_tok_saved_frac": saved,
+         "speedup_vs_noprefix": speedup,
+         "swap_in_ms_per_page": swap_ms,
+         "preempt_swap_noprefix": float(off.stats["preempt_swap"]),
+         "cow_copies": float(on.stats["cow_copies"])}
+    return [BenchResult(
+        f"serve_throughput/{tag}/prefix", on_s * 1e6,
+        f"tok_s={tok_s:.1f} saved={saved:.0%} "
+        f"speedup={speedup:.2f}x swap_in={swap_ms:.2f}ms/page "
+        f"swaps_off={off.stats['preempt_swap']}", metrics=m)]
+
+
 def run(fast: bool = False) -> List["BenchResult"]:
     from benchmarks.common import trained_model
 
@@ -246,6 +334,7 @@ def run(fast: bool = False) -> List["BenchResult"]:
     model, params, _ = trained_model("lm")
     results += _bench_pair("lm", model, params, n_requests)
     results += _bench_streaming("lm", model, params, n_requests)
+    results += _bench_prefix("lm", model, params, n_requests)
     # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config
     # through mode="continuous", tokens identical to the dense cache)
     model, params, _ = trained_model("mamba")

@@ -384,6 +384,25 @@ def decode_state_specs(state: Any) -> Any:
     return jax.tree.map(lambda _: P(), state)
 
 
+def host_arena_stage_spec() -> P:
+    """Placement rule for a host-arena page blob staged for swap-in
+    (serve.kvpool.HostArena — the host-memory KV swap tier below the
+    paged pool, docs/serving.md).
+
+    Replicated.  The staged blob's leading dim is *pages*, and the page
+    dims of the pool never shard (see :func:`paged_kv_block_specs`: the
+    pool is one global address space — any device serves any request),
+    so the bytes streaming back from the host tier replicate the same
+    way; the scatter that lands them (``pool_leaf.at[pages].set(blob)``)
+    then inherits each leaf's pool sharding through its *output*, and
+    the KV-head split (when ``model`` divides the heads) is re-imposed
+    by the operand, not by the staging upload.  Committing the upload
+    here — instead of leaving it an uncommitted host array — keeps the
+    swap-in path's placement an explicit rule rather than whatever the
+    eager scatter infers (docs/dist_api.md)."""
+    return P()
+
+
 # ----------------------------------------------------------------------
 # MoE expert-dispatch rules (models/moe.py shard_map)
 # ----------------------------------------------------------------------

@@ -1,15 +1,31 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``INTERPRET`` auto-detects the backend: on this CPU container every
-kernel runs in interpret mode (Python-level execution of the kernel body
-— bit-faithful to the TPU program structure); on TPU they compile to
-Mosaic.  All wrappers handle padding to tile multiples.
+Dispatch is resolved per call through :func:`dispatch_mode` (no module
+globals to mutate — ISSUE-7 api_redesign):
+
+- ``interpret`` auto-detects the backend: on this CPU container every
+  kernel runs in interpret mode (Python-level execution of the kernel
+  body — bit-faithful to the TPU program structure); on TPU they
+  compile to Mosaic.  All wrappers handle padding to tile multiples.
+- ``force_pallas`` (env ``JAX_PALLAS_INTERPRET=1`` — the CI tier-1
+  kernel step) forces the Pallas kernel BODIES, in interpret mode,
+  through every dispatch that would otherwise take a jnp-oracle
+  shortcut off-TPU (``paged_attention`` below), so kernels/
+  paged_attn.py logic is exercised on CPU-only runners.
+
+Tests and callers that need a specific mode use the
+:func:`override_dispatch` context manager instead of monkeypatching:
+
+    with ops.override_dispatch(force_pallas=True):
+        ops.paged_attention(...)        # kernel body, interpreted
 """
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import os
-from typing import Optional, Tuple
+from typing import Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +37,49 @@ from repro.kernels.hessian_accum import hessian_accum as _hessian
 from repro.kernels.nm_select import nm_select as _nm_select
 from repro.kernels.nm_spmm import nm_spmm as _nm_spmm
 
-INTERPRET = jax.default_backend() != "tpu"
-# JAX_PALLAS_INTERPRET=1 (the CI tier-1 kernel step) forces the Pallas
-# kernel BODIES — in interpret mode — through every dispatch that would
-# otherwise take a jnp-oracle shortcut off-TPU (paged_attention below),
-# so kernels/paged_attn.py logic is exercised on CPU-only runners
-FORCE_PALLAS = os.environ.get("JAX_PALLAS_INTERPRET", "") not in ("", "0")
+
+@dataclasses.dataclass(frozen=True)
+class DispatchMode:
+    """How the wrappers run their kernels right now (immutable —
+    replace via :func:`override_dispatch`, never mutate)."""
+
+    interpret: bool       # Pallas interpret mode (off-TPU default)
+    force_pallas: bool    # kernel bodies even where a jnp oracle exists
+
+
+_OVERRIDE: list = []      # override stack (innermost last)
+
+
+def dispatch_mode() -> DispatchMode:
+    """The active kernel dispatch mode: the innermost
+    :func:`override_dispatch` if one is active, else resolved from the
+    backend and the ``JAX_PALLAS_INTERPRET`` env var at call time."""
+    if _OVERRIDE:
+        return _OVERRIDE[-1]
+    return DispatchMode(
+        interpret=jax.default_backend() != "tpu",
+        force_pallas=os.environ.get("JAX_PALLAS_INTERPRET", "")
+        not in ("", "0"))
+
+
+@contextlib.contextmanager
+def override_dispatch(interpret: Optional[bool] = None,
+                      force_pallas: Optional[bool] = None
+                      ) -> Iterator[DispatchMode]:
+    """Scoped dispatch override (replaces the old pattern of tests
+    mutating ``ops.INTERPRET``/``ops.FORCE_PALLAS`` module globals).
+    Unspecified fields inherit the currently active mode; overrides
+    nest."""
+    base = dispatch_mode()
+    mode = DispatchMode(
+        interpret=base.interpret if interpret is None else interpret,
+        force_pallas=(base.force_pallas if force_pallas is None
+                      else force_pallas))
+    _OVERRIDE.append(mode)
+    try:
+        yield mode
+    finally:
+        _OVERRIDE.pop()
 
 
 def _pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
@@ -58,7 +111,7 @@ def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array,
     valsp = _pad_to(vals, (block // 2, block))
     idxp = _pad_to(idx, (block // 2, block))
     y = _nm_spmm(x2p, valsp, idxp, bm=bm, bn=block, bk=block,
-                 interpret=INTERPRET)
+                 interpret=dispatch_mode().interpret)
     y = y[:m, :n].reshape(*lead, n)
     return y.astype(out_dtype or x.dtype)
 
@@ -67,7 +120,8 @@ def hessian_xxt(x: jax.Array, block: int = 128) -> jax.Array:
     """H = 2·x·xᵀ for x (m, T) via the streaming kernel (f32)."""
     m, t = x.shape
     xp = _pad_to(x, (block, block))
-    h = _hessian(xp, bi=block, bj=block, bt=block, interpret=INTERPRET)
+    h = _hessian(xp, bi=block, bj=block, bt=block,
+                 interpret=dispatch_mode().interpret)
     return h[:m, :m]
 
 
@@ -90,7 +144,8 @@ def nm_select_mask(w: jax.Array, hinv: jax.Array,
     if gp > g:
         eye = jnp.tile(jnp.eye(4).reshape(1, 16), (gp - g, 1))
         hgp = hgp.at[g:].set(eye)
-    mask = _nm_select(wp, hgp, br=brr, bg=bg, interpret=INTERPRET)
+    mask = _nm_select(wp, hgp, br=brr, bg=bg,
+                      interpret=dispatch_mode().interpret)
     return mask[:r, :c].astype(bool)
 
 
@@ -110,16 +165,18 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     would dominate the step; ref.paged_attn_ref is the same math and is
     bit-identical to the dense-cache decode path (use_kernel=True forces
     the kernel, under interpret off-TPU — the parity tests, and
-    JAX_PALLAS_INTERPRET=1 forces it for every default dispatch — the
-    CI kernel-logic step).
+    ``dispatch_mode().force_pallas`` — env JAX_PALLAS_INTERPRET=1 or an
+    ``override_dispatch(force_pallas=True)`` scope — forces it for
+    every default dispatch: the CI kernel-logic step).
     """
+    mode = dispatch_mode()
     if use_kernel is None:
-        use_kernel = FORCE_PALLAS or not INTERPRET
+        use_kernel = mode.force_pallas or not mode.interpret
     if not use_kernel:
         return ref.paged_attn_ref(q, k_pages, v_pages, block_tables,
                                   lengths, window=window)
     out = _paged_attn(q, k_pages, v_pages, block_tables, lengths,
-                      window=window, interpret=INTERPRET)
+                      window=window, interpret=mode.interpret)
     return out.astype(v_pages.dtype)
 
 
@@ -138,5 +195,6 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         qp, kp, vp = q, k, v
     if qp.shape[1] < bq:
         bq = bk = qp.shape[1]
-    o = _flash(qp, kp, vp, bq=bq, bk=bk, causal=causal, interpret=INTERPRET)
+    o = _flash(qp, kp, vp, bq=bq, bk=bk, causal=causal,
+               interpret=dispatch_mode().interpret)
     return o[:, :t, :]

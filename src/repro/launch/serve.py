@@ -16,8 +16,12 @@ path, not parallel plumbing.  ``--serve-mode static`` keeps the legacy
 bucketed engine (no sessions/streaming: the batch path lowers the same
 wire objects straight onto ``ServeEngine.generate``).
 
-The continuous runtime takes ``--page-size`` / ``--num-pages`` for the
-paged KV pool (docs/serving.md).
+Every runtime knob funnels through ONE :class:`repro.serve.ServeConfig`
+built here by ``ServeConfig.from_args`` and handed down whole —
+engine, replicas, router (docs/serving.md).  The continuous runtime's
+paged-pool knobs include ``--page-size`` / ``--num-pages`` plus the
+ISSUE-7 prefix/swap switches ``--prefix-cache/--no-prefix-cache`` and
+``--host-swap-pages``.
 """
 
 from __future__ import annotations
@@ -34,7 +38,7 @@ from repro import configs as cfglib
 from repro.ckpt import load_pytree
 from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
-from repro.serve import ServeEngine, sparsify_params
+from repro.serve import ServeConfig, ServeEngine, sparsify_params
 from repro.serve.frontend import (CompletionRequest, CompletionResponse,
                                   Replica, Router, run_server,
                                   to_engine_request)
@@ -51,6 +55,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="serve slots per engine replica")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--sampling", default="greedy",
                     choices=("greedy", "temperature", "top-k", "top-p"),
@@ -81,6 +87,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "steps in one burst and the host only wakes for "
                          "scheduler events — tokens are bit-identical "
                          "for every K (docs/serving.md)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="hash-based prefix reuse over refcounted KV "
+                         "pages: cached prompt pages attach shared "
+                         "without prefill, copy-on-write on divergence "
+                         "(continuous mode; token streams are "
+                         "bit-identical either way)")
+    ap.add_argument("--host-swap-pages", type=int, default=None,
+                    help="host-memory swap arena capacity in pages: "
+                         "preemption evicts a victim's exclusive pages "
+                         "to the host tier and streams them back on "
+                         "resume instead of recomputing (default: "
+                         "pool-sized; 0 disables → recompute-only)")
     # ---------------------------------------------- server front end
     ap.add_argument("--server", action="store_true",
                     help="run the streaming HTTP front end instead of "
@@ -116,37 +135,20 @@ def load_model(args):
     return cfg, model, params
 
 
-def sampling_args(args):
-    temperature = args.temperature
-    top_k = top_p = None
-    if args.sampling == "top-k":
-        top_k = args.top_k
-    elif args.sampling == "top-p":
-        top_p = args.top_p
-    if args.sampling != "greedy" and temperature <= 0.0:
-        temperature = 1.0              # sampling modes need a live draw
-    return temperature, top_k, top_p
-
-
-def make_engine(model, params, args) -> ServeEngine:
-    temperature, top_k, top_p = sampling_args(args)
+def make_engine(model, params, config: ServeConfig) -> ServeEngine:
     # the engine resolves the active mesh: params go resident
     # tensor-parallel, the paged pool / bucket batches shard by the
     # dist rules
-    return ServeEngine(model, params, max_batch=8, max_len=args.max_len,
-                       temperature=temperature, top_k=top_k, top_p=top_p,
-                       mode=args.serve_mode, page_size=args.page_size,
-                       num_pages=args.num_pages,
-                       prefill_chunk=args.prefill_chunk,
-                       steps_per_sync=args.steps_per_sync)
+    return ServeEngine(model, params, config)
 
 
-def make_router(model, params, args) -> Router:
+def make_router(model, params, config: ServeConfig) -> Router:
     # every replica shares one seed: a request's stream is identical
-    # regardless of which replica serves it (per-(uid, step) keys)
-    reps = [Replica(make_engine(model, params, args), name=f"r{i}",
-                    seed=0, max_waiting=args.queue_depth)
-            for i in range(max(1, args.replicas))]
+    # regardless of which replica serves it (per-(uid, step) keys).
+    # Replica reads its wait-queue cap off engine.config.queue_depth.
+    reps = [Replica(make_engine(model, params, config), name=f"r{i}",
+                    seed=0)
+            for i in range(config.replicas)]
     return Router(reps)
 
 
@@ -162,12 +164,12 @@ def _random_requests(cfg, args):
     ]
 
 
-def run_batch(cfg, model, params, args) -> None:
+def run_batch(cfg, model, params, args, config: ServeConfig) -> None:
     creqs = _random_requests(cfg, args)
     eng = None
     t0 = time.monotonic()
-    if args.serve_mode == "continuous":
-        router = make_router(model, params, args)
+    if config.mode == "continuous":
+        router = make_router(model, params, config)
         eng = router.replicas[0].engine
         if eng.mode != "continuous":
             # arch fell back to static: no sessions — drop to the
@@ -181,9 +183,9 @@ def run_batch(cfg, model, params, args) -> None:
             _summary(results, [r.engine for r in router.replicas], dt)
             return
     if eng is None:
-        eng = make_engine(model, params, args)
-    if eng.mode != args.serve_mode:
-        print(f"note: {args.serve_mode} unsupported for {cfg.name} — "
+        eng = make_engine(model, params, config)
+    if eng.mode != config.mode:
+        print(f"note: {config.mode} unsupported for {cfg.name} — "
               f"fell back to {eng.mode}")
     # static engines have no session/streaming path; same wire objects,
     # lowered straight onto generate()
@@ -209,11 +211,11 @@ def _summary(results, engines, dt) -> None:
           + (f" preemptions {preempts}" if preempts else ""))
 
 
-def run_frontend(cfg, model, params, args) -> None:
-    if args.serve_mode != "continuous":
+def run_frontend(cfg, model, params, args, config: ServeConfig) -> None:
+    if config.mode != "continuous":
         raise SystemExit("--server needs the continuous runtime "
                          "(streaming sessions); drop --serve-mode static")
-    router = make_router(model, params, args)
+    router = make_router(model, params, config)
     if router.replicas[0].engine.mode != "continuous":
         raise SystemExit(f"--server unsupported for {cfg.name}: the arch "
                          f"falls back to the static bucketed engine")
@@ -226,12 +228,13 @@ def run_frontend(cfg, model, params, args) -> None:
 
 def main() -> None:
     args = build_parser().parse_args()
+    config = ServeConfig.from_args(args)   # the ONE knob intake point
     with mesh_context(args.mesh):
         cfg, model, params = load_model(args)
         if args.server:
-            run_frontend(cfg, model, params, args)
+            run_frontend(cfg, model, params, args, config)
         else:
-            run_batch(cfg, model, params, args)
+            run_batch(cfg, model, params, args, config)
 
 
 if __name__ == "__main__":

@@ -1,30 +1,40 @@
 """Serving: continuous-batching paged runtime + 2:4-sparse weights.
 
+  config     ServeConfig — the ONE dataclass carrying every serve
+             knob (mode/batch/sampling/paging/prefix/swap/frontend),
+             validated in one place and threaded engine → replicas →
+             router → benchmarks
   engine     ServeEngine — continuous batching (static-bucket escape
              hatch), chunked paged prefill, greedy/temperature/top-k/
              top-p sampling, mesh-resident params
   fused      the device-resident decode inner loop: fused sample/
              record/advance step + multi-step burst (steps_per_sync)
-  kvpool     PagedKVPool — fixed-size KV pages, free-list allocator,
-             per-request block tables (dist-sharded pool);
-             StatePool — slot-recycled recurrent-state pool for
-             Mamba/xLSTM/hybrid mixers
+  kvpool     PagedKVPool — refcounted fixed-size KV pages, free-list
+             allocator, per-request block tables (dist-sharded pool),
+             copy-on-write sharing; PrefixCache — hash-chained prompt
+             prefix index (attach cached pages instead of prefilling);
+             HostArena — host-memory swap tier for preserve-KV
+             preemption; StatePool — slot-recycled recurrent-state
+             pool for Mamba/xLSTM/hybrid mixers
   scheduler  Scheduler — join-at-prefill / chunked prefill / retire-at-
-             EOS / preemption; SLA-aware wait queue (priority/deadline)
-             with a QueueFull depth cap
+             EOS / swap-or-recompute preemption; SLA-aware wait queue
+             (priority/deadline) with a QueueFull depth cap
   frontend   async serving layer: OpenAI-style streaming HTTP server,
              worker-thread replicas, least-loaded multi-replica router
              (docs/serving_frontend.md)
   sparse     2:4 weight packing → kernels.nm_spmm serve path
 """
 
+from repro.serve.config import ServeConfig
 from repro.serve.engine import (ServeEngine, Request, Result, StreamEvent,
                                 ContinuousSession)
-from repro.serve.kvpool import PagedKVPool, StatePool
+from repro.serve.kvpool import (PagedKVPool, StatePool, PrefixCache,
+                                HostArena, SwapRecord)
 from repro.serve.scheduler import Scheduler, Sequence, SeqState, QueueFull
 from repro.serve.sparse import sparsify_params, DEFAULT_SPARSE_PATTERNS
 
 __all__ = [
+    "ServeConfig",
     "ServeEngine",
     "Request",
     "Result",
@@ -32,6 +42,9 @@ __all__ = [
     "ContinuousSession",
     "QueueFull",
     "PagedKVPool",
+    "PrefixCache",
+    "HostArena",
+    "SwapRecord",
     "StatePool",
     "Scheduler",
     "Sequence",

@@ -1,0 +1,141 @@
+"""ServeConfig: the one object carrying every serve-runtime knob.
+
+PR-3..6 grew the serving stack a keyword argument at a time —
+``--serve-mode/--page-size/--num-pages/--prefill-chunk/--steps-per-sync/
+--sampling/--top-k/--top-p/--replicas/--queue-depth`` — each threaded
+positionally through ``launch/serve.py`` → :class:`ServeEngine` →
+``frontend.Replica``/``Router`` and duplicated in the benchmarks.  This
+dataclass is the consolidation point (ISSUE-7): one object, one
+``validate()``, constructed once (``ServeConfig.from_args`` in the
+launcher, a literal in tests/benchmarks) and handed down whole.
+
+``ServeEngine(model, params, **knobs)`` still works — the engine builds
+a config from bare keywords — so call sites migrate at their own pace;
+new knobs land HERE, not in another positional parameter.
+
+Prefix caching + tiered KV (the ISSUE-7 tentpole) add:
+
+  ``prefix_cache``      hash-based prefix reuse over refcounted pages
+                        (kvpool.PrefixCache) — matching full pages of a
+                        new prompt attach without prefill, divergence
+                        triggers copy-on-write (docs/serving.md)
+  ``host_swap_pages``   host-memory swap arena capacity in pages
+                        (kvpool.HostArena): preemption evicts a
+                        victim's exclusive pages to the host tier and
+                        streams them back on resume instead of
+                        recomputing.  ``None`` sizes the arena to the
+                        pool (swap-preferred); ``0`` disables swap
+                        (recompute-only, the pre-ISSUE-7 behavior).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+_MODES = ("continuous", "static")
+_SAMPLING = ("greedy", "temperature", "top-k", "top-p")
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Every serve-runtime knob, validated in one place."""
+
+    # engine
+    mode: str = "continuous"
+    max_batch: int = 8
+    max_len: int = 256
+    eos_id: Optional[int] = None
+    # sampling (per-(uid, step)-keyed in continuous mode)
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    # paged runtime
+    page_size: int = 16
+    num_pages: Optional[int] = None     # None → dense-cache equivalent
+    prefill_chunk: int = 32
+    steps_per_sync: int = 8
+    # prefix caching + tiered KV (ISSUE-7 tentpole)
+    prefix_cache: bool = True
+    host_swap_pages: Optional[int] = None   # None → pool-sized; 0 → off
+    # front end (launch/serve.py, frontend.Replica/Router)
+    replicas: int = 1
+    queue_depth: Optional[int] = None   # wait-queue cap → HTTP 429
+
+    def validate(self) -> "ServeConfig":
+        """The single validation point.  Returns self (chainable)."""
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown serve mode {self.mode!r} "
+                             f"(expected one of {_MODES})")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_len < 1:
+            raise ValueError("max_len must be >= 1")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.num_pages is not None and self.num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is scrap)")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.steps_per_sync < 1:
+            raise ValueError("steps_per_sync must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0 (0 = greedy)")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError("top_k must be >= 1")
+        if self.top_p is not None and not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if self.host_swap_pages is not None and self.host_swap_pages < 0:
+            raise ValueError("host_swap_pages must be >= 0 (0 = off)")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        return self
+
+    def resolved_num_pages(self) -> int:
+        """The pool size: explicit, or the dense static cache's token
+        capacity + the scrap page."""
+        if self.num_pages is not None:
+            return self.num_pages
+        per_slot = -(-self.max_len // self.page_size)
+        return self.max_batch * per_slot + 1
+
+    def resolved_swap_pages(self) -> int:
+        """Host-arena capacity: explicit, or pool-sized (every live
+        page can swap out)."""
+        if self.host_swap_pages is not None:
+            return self.host_swap_pages
+        return self.resolved_num_pages()
+
+    # ------------------------------------------------------------ intake
+    @classmethod
+    def from_args(cls, args) -> "ServeConfig":
+        """Build from the ``launch/serve.py`` argparse namespace — the
+        one place CLI flags map onto runtime knobs.  ``--sampling``
+        resolves to (temperature, top_k, top_p) here: non-greedy modes
+        need a live draw, so a zero temperature is bumped to 1.0."""
+        temperature = args.temperature
+        top_k = top_p = None
+        if args.sampling == "top-k":
+            top_k = args.top_k
+        elif args.sampling == "top-p":
+            top_p = args.top_p
+        if args.sampling != "greedy" and temperature <= 0.0:
+            temperature = 1.0
+        return cls(
+            mode=args.serve_mode,
+            max_batch=args.max_batch,
+            max_len=args.max_len,
+            temperature=temperature,
+            top_k=top_k,
+            top_p=top_p,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            prefill_chunk=args.prefill_chunk,
+            steps_per_sync=args.steps_per_sync,
+            prefix_cache=args.prefix_cache,
+            host_swap_pages=args.host_swap_pages,
+            replicas=args.replicas,
+            queue_depth=args.queue_depth,
+        ).validate()

@@ -12,8 +12,11 @@ on-device multi-step burst (``steps_per_sync`` fused steps per host
 sync).  The host only wakes to make scheduler decisions — admission,
 prefill chunks, retirement, page capacity, preemption — reading back
 one small packed state blob per burst instead of per-step logits.
-When the pool runs dry the youngest request is preempted
-(recompute-style) and re-queued.
+When the pool runs dry the youngest request is preempted and re-queued
+— preserve-KV swap to the host arena when it has room (tokens kept,
+resume mid-stream), recompute otherwise.  Admission consults the
+pool's prefix index when enabled: cached prompt pages attach shared
+(no prefill) with copy-on-write on divergence — see kvpool.
 
 ``mode="static"`` is the legacy escape hatch (PR 2's ``pipeline="off"``
 pattern): requests bucketed by prompt length, one batched prefill + a
@@ -54,15 +57,27 @@ import numpy as np
 
 from repro.models.transformer import LM
 from repro.serve import fused
+from repro.serve.config import ServeConfig
 
 # every mixer the paged runtime serves: attention (KV pages) plus the
 # recurrent kinds (slot-pooled state — the canonical list lives on LM,
 # which init_paged_cache validates against)
 PAGED_KINDS = ("attn", "attn_local", *LM.STATE_KINDS)
 
-# template of ServeEngine.stats (docstring on the __init__ assignment)
-_STATS_ZERO = {"host_syncs": 0, "device_steps": 0, "prefill_chunks": 0,
-               "tokens": 0, "decode_wall_s": 0.0}
+# template of ServeEngine.stats (docstring on the __init__ assignment).
+# The scheduler increments its slice in place (it is handed this very
+# dict) and the pool's counters are merged in every sync interval, so
+# the frontend /stats endpoint sees one flat namespace.
+_STATS_ZERO = {
+    "host_syncs": 0, "device_steps": 0, "prefill_chunks": 0,
+    "tokens": 0, "decode_wall_s": 0.0,
+    # scheduler: preemption flavor split + prefix-reuse accounting
+    "preempt_swap": 0, "preempt_recompute": 0,
+    "prefix_hit_tokens": 0, "prefill_tok": 0,
+    # pool: copy-on-write + host-arena swap traffic
+    "cow_copies": 0, "prefix_evictions": 0,
+    "swap_out_pages": 0, "swap_in_pages": 0, "swap_in_wall_s": 0.0,
+}
 
 
 @dataclasses.dataclass
@@ -121,24 +136,27 @@ class ServeEngine:
         self,
         model: LM,
         params,
-        max_batch: int = 8,
-        max_len: int = 256,
-        eos_id: Optional[int] = None,
-        temperature: float = 0.0,
-        top_k: Optional[int] = None,
-        top_p: Optional[float] = None,
+        config: Optional[ServeConfig] = None,
+        *,
         extra_batch: Optional[Dict[str, jax.Array]] = None,
         mesh=None,
-        mode: str = "continuous",
-        page_size: int = 16,
-        num_pages: Optional[int] = None,
-        prefill_chunk: int = 32,
-        steps_per_sync: int = 8,
+        **knobs,
     ):
+        """``config`` is the one knob surface (serve.config.ServeConfig).
+        Bare keywords still work — ``ServeEngine(model, params,
+        max_batch=4, mode="static")`` builds a config from them, and
+        keywords override fields of an explicit config — so pre-ISSUE-7
+        call sites are untouched.  Validation happens exactly once, in
+        ``ServeConfig.validate``."""
         from repro.dist import current_ctx, dp_axes_of, shard_params
 
-        if mode not in ("continuous", "static"):
-            raise ValueError(f"unknown serve mode {mode!r}")
+        if config is None:
+            config = ServeConfig(**knobs)
+        elif knobs:
+            config = dataclasses.replace(config, **knobs)
+        config.validate()
+        self.config = config
+        max_batch, max_len = config.max_batch, config.max_len
         self.model = model
         if mesh is None:
             ctx = current_ctx()
@@ -159,14 +177,16 @@ class ServeEngine:
         self.params = (shard_params(params, mesh, fsdp_axes=(),
                                     head_dim=model.cfg.hd)
                        if mesh is not None else params)
+        # attribute aliases onto the config (the pre-ISSUE-7 surface —
+        # call sites and subclasses read these freely)
         self.max_batch = max_batch
         self.max_len = max_len
-        self.eos_id = eos_id
-        self.temperature = temperature
-        self.top_k = top_k
-        self.top_p = top_p
+        self.eos_id = config.eos_id
+        self.temperature = config.temperature
+        self.top_k = config.top_k
+        self.top_p = config.top_p
         self.extra_batch = extra_batch or {}
-        self.steps_per_sync = max(1, int(steps_per_sync))
+        self.steps_per_sync = max(1, int(config.steps_per_sync))
         self._prefill = jax.jit(model.prefill)
         # static-mode fused decode loops, built per early-exit variant on
         # first use (see fused.make_static_burst)
@@ -191,32 +211,39 @@ class ServeEngine:
                     and not self.extra_batch and cfg.moe is None
                     and all(k in PAGED_KINDS
                             for k in (*cfg.prefix, *cfg.period)))
-        self.mode = mode if paged_ok else "static"
+        # self.mode is the EFFECTIVE mode (config.mode stays as asked)
+        self.mode = config.mode if paged_ok else "static"
         self.pool = None
         self.state_pool = None
         self._state_shardings = None
+        self._swap_ok = False
         if self.mode == "continuous":
             from repro.serve.kvpool import PagedKVPool, StatePool
 
-            self.page_size = page_size
-            self.chunk_size = prefill_chunk
-            if num_pages is None:
-                # same token capacity as the dense static cache, + scrap
-                num_pages = max_batch * (-(-max_len // page_size)) + 1
+            page_size = self.page_size = config.page_size
+            self.chunk_size = config.prefill_chunk
             self.pool = PagedKVPool(
-                model, num_pages=num_pages, page_size=page_size,
-                max_slots=max_batch, max_len=max_len, mesh=mesh)
+                model, num_pages=config.resolved_num_pages(),
+                page_size=page_size, max_slots=max_batch, max_len=max_len,
+                mesh=mesh, prefix_cache=config.prefix_cache,
+                host_swap_pages=config.resolved_swap_pages())
             state = StatePool(model, max_slots=max_batch)
             self.state_pool = state if state.has_state else None
+            # swap preemption preserves KV pages only — recurrent-state
+            # rows live outside the page pool, so hybrid/recurrent archs
+            # keep recompute preemption (StatePool docstring)
+            self._swap_ok = (self.state_pool is None
+                             and self.pool.arena is not None)
             # output ring: burst length + 1 cell for the token a
             # prefill-fused burst's activation emits (fused module doc)
             self._ring = self.steps_per_sync + 1
             self._burst = fused.make_continuous_burst(
-                model, page_size, temperature=temperature, top_k=top_k,
-                top_p=top_p, eos_id=eos_id)
+                model, page_size, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p, eos_id=self.eos_id)
             self._prefill_burst = fused.make_prefill_burst(
-                model, page_size, self.chunk_size, temperature=temperature,
-                top_k=top_k, top_p=top_p, eos_id=eos_id)
+                model, page_size, self.chunk_size,
+                temperature=self.temperature, top_k=self.top_k,
+                top_p=self.top_p, eos_id=self.eos_id)
             if mesh is not None:
                 from repro.dist import named_shardings
                 from repro.dist.sharding import decode_state_specs
@@ -384,8 +411,12 @@ class ContinuousSession:
 
         self.engine = engine
         engine.pool.reset()
+        # the scheduler increments its counters directly in the
+        # engine's stats dict — one flat namespace at /stats
         self.sched = Scheduler(engine.pool, engine.max_batch,
-                               max_waiting=max_waiting)
+                               max_waiting=max_waiting,
+                               swap=engine._swap_ok,
+                               stats=engine.stats)
         self.base_key = jax.random.key(seed)
         self._emitted: Dict[int, int] = {}    # uid -> tokens delivered
 
@@ -544,6 +575,12 @@ class ContinuousSession:
         if will_activate:
             pseq.state = SeqState.RUNNING
             live.append(pseq)
+            if pool.prefix is not None:
+                # the prompt's full pages are now written and immutable
+                # (decode writes land past them) — index them so the
+                # next identical prefix attaches instead of prefilling
+                pool.prefix.register(pseq.req.prompt,
+                                     pool.slot_pages(pseq.slot))
         for s in live:
             n = int(st["n_out"][s.slot])
             if n:
@@ -554,9 +591,20 @@ class ContinuousSession:
                 s.n_written += adv
                 s.occupied_steps += adv
             if bool(st["done"][s.slot]):
+                if pool.prefix is not None:
+                    # retirement: index the generated continuation too
+                    # (full pages + the partial tail as a CoW source).
+                    # KV covers positions < n_written — the final
+                    # sampled token never wrote its entry
+                    kv_toks = np.concatenate([
+                        np.asarray(s.req.prompt, np.int32),
+                        np.asarray(s.tokens, np.int32)])[:s.n_written]
+                    pool.prefix.register(kv_toks, pool.slot_pages(s.slot),
+                                         include_partial=True)
                 sched.finish(s)
             ev = self._event(s)
             if ev is not None:
                 events.append(ev)
         eng.stats["tokens"] += sum(len(e.tokens) for e in events)
+        eng.stats.update(pool.stats)      # CoW/swap/eviction counters
         return events

@@ -39,6 +39,8 @@ from repro.serve.frontend.protocol import (CompletionRequest,
 # this long while work is pending is reported unhealthy
 HEALTH_STALL_S = 60.0
 
+_UNSET = object()   # distinguishes "use engine.config" from explicit None
+
 
 class ReplicaDraining(RuntimeError):
     """Raised by :meth:`Replica.submit` after :meth:`Replica.drain` —
@@ -47,10 +49,16 @@ class ReplicaDraining(RuntimeError):
 
 class Replica:
     def __init__(self, engine: ServeEngine, name: str = "r0",
-                 seed: int = 0, max_waiting: Optional[int] = None):
+                 seed: int = 0, max_waiting=_UNSET):
         # NOTE: router parity contract — every replica must be built
         # with the same seed, so a request's stream is bit-identical
         # regardless of which replica serves it (per-(uid, step) keys).
+        #
+        # max_waiting defaults to the engine's ServeConfig.queue_depth —
+        # one knob surface; pass an explicit value (or None = unbounded)
+        # to override per replica.
+        if max_waiting is _UNSET:
+            max_waiting = engine.config.queue_depth
         self.name = name
         self.engine = engine
         self.session = engine.session(seed=seed, max_waiting=max_waiting)

@@ -1,17 +1,43 @@
-"""Paged serve cache: KV pages + slot-recycled recurrent-state pool.
+"""Paged serve cache: refcounted KV pages, prefix reuse, tiered swap.
 
 The continuous-batching serve runtime (docs/serving.md) stores every
 request's attention KV cache in fixed-size pages drawn from one global
 pool — a pytree of (num_pages, page_size, KV, hd) arrays mirroring the
 model's block layout (``LM.init_paged_cache``).  A request owns a
 *block table* row mapping its logical token positions to physical page
-ids; pages are recycled through a host-side free list the moment a
-request retires or is preempted, so cache capacity tracks *live tokens*
-instead of ``max_batch × max_len``.
+ids.
+
+Page ownership is **refcounted** (ISSUE-7): ``alloc`` hands out pages
+at refcount 1, ``retain``/``release`` move the count, and a page
+returns to the free list only when its last reference drops.  One
+physical page can therefore back the same token prefix in many block
+tables at once — "shared" is *derived* (refcount > 1), not a flag, and
+a shared page is read-only by convention: the first divergent write
+goes through :meth:`PagedKVPool.ensure_writable`, which copies the
+page's contents into a fresh exclusively-owned page (copy-on-write)
+and repoints the writer's table row.
 
 Page 0 is the reserved **scrap page**: never allocated, it absorbs the
 writes of padded prefill positions and idle decode slots (attention
 masks by length, so scrap contents are never read).
+
+:class:`PrefixCache` is the hash-based prefix index over those shared
+pages: prompts are chunk-hashed page-by-page at admission
+(``h_i = blake2b(h_{i-1} ‖ tokens_of_page_i)``, token-exact verified —
+a hash collision can never serve wrong KV), matching full pages attach
+without prefill, and a matching *partial* tail page attaches through an
+eager copy-on-write (the divergence point is known at admission, so the
+copy happens before the first write instead of mid-burst).  Entries are
+evicted LRU-leaf-first, lazily, from inside :meth:`PagedKVPool.alloc` —
+cached prefixes only ever occupy pages nobody else is asking for.
+
+:class:`HostArena` is the host-memory swap tier (ISSUE-7): preemption
+can evict a victim's *exclusive* pages to a pinned numpy arena
+(``jax.device_get`` gather) and stream them back on resume instead of
+recomputing — shared pages are kept device-resident (the victim's
+reference pins them), so a swap moves only bytes no one else holds.
+The per-(uid, step) sampling key contract already makes preemption
+invisible in token streams; swap additionally makes it cheap.
 
 Recurrent mixers (mamba/mlstm/slstm) carry O(1) per-request state, not
 per-token KV — their leaves in the same cache tree form a
@@ -23,28 +49,80 @@ overwrites a slot's rows with the block's init state at admission.
 On a mesh the cache is placed by the ``dist.sharding`` rules
 (:func:`repro.dist.sharding.paged_kv_block_specs` /
 :func:`~repro.dist.sharding.paged_state_block_specs` via
-``LM.paged_cache_specs``): page/slot dims replicated over the data axes,
-widths over ``model`` only on head-aligned splits (deliberately no
-sub-head fallback — see the rules functions).
+``LM.paged_cache_specs``); swap-in staging uses
+:func:`repro.dist.sharding.host_arena_stage_spec`.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import itertools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# template of PagedKVPool.stats — merged into ServeEngine.stats every
+# sync interval (and so visible at the frontend /stats endpoint)
+_POOL_STATS_ZERO = {
+    "cow_copies": 0,          # ensure_writable / prefix-attach page copies
+    "prefix_evictions": 0,    # index entries evicted to refill the pool
+    "swap_out_pages": 0,      # pages gathered to the host arena
+    "swap_in_pages": 0,       # pages restored from the host arena
+    "swap_in_wall_s": 0.0,    # wall time inside swap-in restores
+}
+
+
+def _tree_get(tree, path):
+    node = tree
+    for key in path:
+        node = node[key]
+    return node
+
+
+def _tree_set(tree, path, value):
+    """Functionally replace ``tree[path[0]][path[1]]...`` with value."""
+    if not path:
+        return value
+    new = dict(tree)
+    new[path[0]] = _tree_set(tree[path[0]], path[1:], value)
+    return new
+
+
+def attn_leaf_paths(cfg) -> List[Tuple[Tuple[str, ...], bool]]:
+    """Paths of the attention page blocks inside the paged cache tree:
+    ``(path, stacked)`` per block — stacked (period) blocks carry a
+    leading lax.scan layer dim, so their page dim is axis 1.  The same
+    walk :class:`StatePool` does for the recurrent kinds."""
+    paths: List[Tuple[Tuple[str, ...], bool]] = []
+    for i, kind in enumerate(cfg.prefix):
+        if kind in ("attn", "attn_local"):
+            paths.append((("prefix", str(i)), False))
+    for j, kind in enumerate(cfg.period):
+        if kind in ("attn", "attn_local"):
+            paths.append((("layers", f"s{j}"), True))
+    return paths
+
 
 class PagedKVPool:
-    """Free-list page allocator + the device-resident page arrays.
+    """Refcounted free-list page allocator + the device page arrays.
 
     The device pytree lives in :attr:`kv` and is updated *functionally*:
     the engine passes it through the jitted prefill/decode steps
     (donated) and stores the returned tree back.  Allocation state
-    (free list, block tables, per-slot page counts) is host-side numpy —
-    the scheduler mutates it synchronously between steps.
+    (free list, refcounts, block tables, per-slot page counts) is
+    host-side numpy — the scheduler mutates it synchronously between
+    steps.
+
+    Ownership contract: ``alloc`` → refcount 1 (exclusive, writable);
+    ``retain`` adds a reference (the prefix index and every additional
+    block-table row each hold one); ``release`` drops one, freeing the
+    page at zero.  A page is writable only while its refcount is 1 —
+    :meth:`ensure_writable` enforces that with a device-side
+    copy-on-write when a write position lands in a shared page.
     """
 
     def __init__(
@@ -57,6 +135,8 @@ class PagedKVPool:
         max_len: int,
         dtype=None,
         mesh=None,
+        prefix_cache: bool = False,
+        host_swap_pages: int = 0,
     ):
         if num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is scrap)")
@@ -64,6 +144,7 @@ class PagedKVPool:
         self.num_pages = num_pages
         self.max_slots = max_slots
         self.pages_per_slot = -(-max_len // page_size)
+        self.mesh = mesh
         cfg = model.cfg
         # pure recurrent-state archs have no KV pages: prompts cost 0
         # pages and decode never extends a block table
@@ -80,8 +161,18 @@ class PagedKVPool:
             (max_slots, self.pages_per_slot), np.int32)
         self._n_pages = np.zeros((max_slots,), np.int32)
         self._free: List[int] = []
+        self._ref = np.zeros((num_pages,), np.int32)
         self._tables_dev: Optional[jax.Array] = None
         self._dirty: set = set()          # slot rows changed since upload
+        self._attn_paths = attn_leaf_paths(cfg) if self.has_kv_pages else []
+        self._copy_jit = None             # lazy jitted CoW page copy
+        self.stats: Dict[str, float] = dict(_POOL_STATS_ZERO)
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(self) if prefix_cache and self.has_kv_pages
+            else None)
+        self.arena: Optional[HostArena] = (
+            HostArena(self, host_swap_pages)
+            if host_swap_pages > 0 and self.has_kv_pages else None)
         self.reset()
 
     # ----------------------------------------------------------- alloc
@@ -102,28 +193,69 @@ class PagedKVPool:
         return -(-n_tokens // self.page_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages off the free list; None if it would overdraw
-        (all-or-nothing, so a half-admitted request never holds pages)."""
+        """Pop ``n`` pages off the free list at refcount 1; None if it
+        would overdraw (all-or-nothing, so a half-admitted request never
+        holds pages).  A short free list first evicts prefix-index
+        leaves LRU-first — cached prefixes never block live traffic."""
         if n <= 0:              # [-0:] would slice the WHOLE free list
             return []
+        if self.prefix is not None:
+            while n > len(self._free) and self.prefix.evict_lru():
+                pass
         if n > len(self._free):
             return None
         out = self._free[-n:][::-1]
         del self._free[-n:]
+        self._ref[out] = 1
         return out
 
+    def retain(self, page: int) -> None:
+        """Add a reference to a live page (sharing it)."""
+        assert page != 0, "scrap page is not shareable"
+        assert self._ref[page] > 0, f"retain of free page {page}"
+        self._ref[page] += 1
+
     def release(self, pages: Sequence[int]) -> None:
-        assert 0 not in pages, "scrap page is not allocatable"
-        self._free.extend(pages)
+        """Drop one reference per page; pages free at refcount 0."""
+        for p in pages:
+            assert p != 0, "scrap page is not allocatable"
+            assert self._ref[p] > 0, f"release of free page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def check_invariants(self) -> None:
+        """Refcount accounting invariants (tests / the hypothesis state
+        machine): free + live partitions the allocatable pages, the
+        scrap page is never owned, no count goes negative."""
+        assert self._ref[0] == 0
+        assert (self._ref >= 0).all()
+        free = set(self._free)
+        assert len(free) == len(self._free), "double-free"
+        live = {int(p) for p in np.nonzero(self._ref)[0]}
+        assert free.isdisjoint(live)
+        assert len(free) + len(live) == self.capacity
 
     # ------------------------------------------------------ block tables
     def assign(self, slot: int, pages: Sequence[int]) -> None:
-        """Append ``pages`` to a slot's block table (logical order)."""
+        """Append ``pages`` to a slot's block table (logical order).
+        Pure table bookkeeping — the caller owns one reference per page
+        (``alloc`` for fresh pages, ``retain`` for shared ones)."""
         n = int(self._n_pages[slot])
         assert n + len(pages) <= self.pages_per_slot, "slot exceeds max_len"
         self.block_tables[slot, n:n + len(pages)] = pages
         self._n_pages[slot] = n + len(pages)
         self._dirty.add(slot)
+
+    def attach(self, slot: int, pages: Sequence[int]) -> None:
+        """Map already-live pages into a slot's table read-only
+        (prefix sharing): one ``retain`` per page + ``assign``."""
+        for p in pages:
+            self.retain(p)
+        self.assign(slot, pages)
 
     def slot_page_count(self, slot: int) -> int:
         return int(self._n_pages[slot])
@@ -145,8 +277,14 @@ class PagedKVPool:
         self.block_tables[:] = 0
         self._n_pages[:] = 0
         self._free = list(range(self.num_pages - 1, 0, -1))
+        self._ref[:] = 0
         self._tables_dev = None
         self._dirty.clear()
+        self.stats = dict(_POOL_STATS_ZERO)
+        if self.prefix is not None:
+            self.prefix.clear()
+        if self.arena is not None:
+            self.arena.reset()
 
     def tables_device(self) -> jax.Array:
         """Device-resident mirror of the block tables.  Uploaded whole
@@ -154,8 +292,8 @@ class PagedKVPool:
         row dirty and the next call scatters the few changed rows into
         the resident array (``.at[rows].set``) — steady-state bursts
         reuse the device buffer with zero host traffic, and a retire/
-        admit/page-extend event costs one small row upload instead of a
-        full-table re-upload."""
+        admit/page-extend/prefix-attach/CoW event costs one small row
+        upload instead of a full-table re-upload."""
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.block_tables)
             self._dirty.clear()
@@ -166,6 +304,410 @@ class PagedKVPool:
                     jnp.asarray(self.block_tables[rows]))
             self._dirty.clear()
         return self._tables_dev
+
+    # ------------------------------------------------------ copy-on-write
+    def copy_page(self, src: int, dst: int) -> None:
+        """Device-side page copy: every attention leaf's ``dst`` page
+        gets ``src``'s contents (one jitted donated dispatch — the CoW
+        data plane)."""
+        if self._copy_jit is None:
+            paths = self._attn_paths
+
+            def copy(kv, s, d):
+                for path, stacked in paths:
+                    block = _tree_get(kv, path)
+                    if stacked:
+                        new = {k: v.at[:, d].set(v[:, s])
+                               for k, v in block.items()}
+                    else:
+                        new = {k: v.at[d].set(v[s])
+                               for k, v in block.items()}
+                    kv = _tree_set(kv, path, new)
+                return kv
+
+            self._copy_jit = jax.jit(copy, donate_argnums=(0,))
+        self.kv = self._copy_jit(self.kv, np.int32(src), np.int32(dst))
+        self.stats["cow_copies"] += 1
+
+    def ensure_writable(self, slot: int, pos: int) -> bool:
+        """Copy-on-write guard: make the page backing write position
+        ``pos`` exclusively owned by ``slot``.  No-op at refcount 1
+        (the common case — prefix attachment copies divergent tails
+        eagerly at admission, so decode writes normally land in
+        exclusive pages already).  On a shared page: alloc a fresh page
+        (False when the pool can't back it — the scheduler preempts,
+        exactly like a failed page extension), copy contents, drop the
+        shared reference, repoint the table row."""
+        if not self.has_kv_pages:
+            return True
+        idx = pos // self.page_size
+        page = int(self.block_tables[slot, idx])
+        assert idx < self._n_pages[slot] and page != 0, "unmapped write"
+        if self._ref[page] == 1:
+            return True
+        fresh = self.alloc(1)
+        if fresh is None:
+            return False
+        self.copy_page(page, fresh[0])
+        self.release([page])
+        self.block_tables[slot, idx] = fresh[0]
+        self._dirty.add(slot)
+        return True
+
+    # ------------------------------------------------------------- swap
+    def swap_out(self, slot: int) -> Optional["SwapRecord"]:
+        """Preserve-KV preemption, evict side: gather the slot's
+        *exclusive* pages into the host arena and release them; shared
+        pages (prefix-cached or multi-table) stay device-resident with
+        the victim's reference transferred to the returned record — the
+        kept pages cannot be freed (or their entries' eviction cannot
+        recycle them) while the victim waits.  Returns None when the
+        arena can't hold the exclusive set (the scheduler falls back to
+        recompute preemption), leaving the slot untouched."""
+        if self.arena is None:
+            return None
+        pages = self.slot_pages(slot)
+        host = [p for p in pages if self._ref[p] == 1]
+        if not self.arena.has_room(len(host)):
+            return None
+        arena_slots = self.arena.gather(self.kv, host)
+        by_page = dict(zip(host, arena_slots))
+        entries: List[Tuple[str, int]] = [
+            ("host", by_page[p]) if p in by_page else ("kept", p)
+            for p in pages]
+        self.release(host)            # data now lives in the arena
+        self.block_tables[slot] = 0   # kept refs move to the record
+        self._n_pages[slot] = 0
+        self._dirty.add(slot)
+        self.stats["swap_out_pages"] += len(host)
+        return SwapRecord(entries=entries)
+
+    def swap_in(self, slot: int, record: "SwapRecord") -> bool:
+        """Preserve-KV preemption, resume side: alloc fresh pages for
+        the host-resident part of ``record`` (False when the pool can't
+        back them — the queue head blocks, exactly like a too-big
+        prompt), upload the arena contents into them, and rebuild the
+        slot's table in logical order — kept pages slot back in place
+        with the record's reference becoming the table's.  Nothing is
+        mutated on failure."""
+        host_slots = [s for tag, s in record.entries if tag == "host"]
+        fresh = self.alloc(len(host_slots))
+        if fresh is None:
+            return False
+        t0 = time.monotonic()
+        if host_slots:
+            self.kv = self.arena.scatter(self.kv, host_slots, fresh)
+        it = iter(fresh)
+        pages = [s if tag == "kept" else next(it)
+                 for tag, s in record.entries]
+        self.assign(slot, pages)
+        self.arena.free(host_slots)
+        self.stats["swap_in_pages"] += len(host_slots)
+        self.stats["swap_in_wall_s"] += time.monotonic() - t0
+        return True
+
+    def drop_swap(self, record: "SwapRecord") -> None:
+        """Abandon a swap record (its request was cancelled or falls
+        back to recompute): free the arena slots and the kept pages'
+        references."""
+        host_slots = [s for tag, s in record.entries if tag == "host"]
+        self.arena.free(host_slots)
+        self.release([p for tag, p in record.entries if tag == "kept"])
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """A swapped-out request's page state, in logical order: ``("host",
+    arena_slot)`` for pages gathered to the host tier, ``("kept",
+    page)`` for shared pages kept device-resident (the record holds
+    their reference)."""
+
+    entries: List[Tuple[str, int]]
+
+    @property
+    def n_host(self) -> int:
+        return sum(1 for tag, _ in self.entries if tag == "host")
+
+
+# ----------------------------------------------------------------------
+# hash-based prefix index
+# ----------------------------------------------------------------------
+class _Entry:
+    __slots__ = ("digest", "parent", "page", "tokens", "children",
+                 "last_use", "partial")
+
+    def __init__(self, digest, parent, page, tokens, partial):
+        self.digest = digest
+        self.parent = parent
+        self.page = page
+        self.tokens = tokens
+        self.children = 0
+        self.last_use = 0
+        self.partial = partial
+
+
+class PrefixCache:
+    """Chain-hash index of cached token prefixes over pool pages.
+
+    Full pages chain: ``h_i = blake2b(h_{i-1} ‖ page-i tokens)`` — a
+    lookup walks the prompt page by page, so matching is O(prompt) with
+    no global scans.  Every entry stores its exact tokens and a match
+    re-verifies them, so a digest collision degrades to a cache miss,
+    never to wrong KV.  Partial tail pages (< page_size tokens, from
+    retired requests) index under their parent's digest and match by
+    longest-common-prefix; they attach via copy-on-write (the writer
+    gets a fresh copy), full pages attach read-only shared.
+
+    The index holds one pool reference per entry page.  Eviction is
+    LRU over *leaf* entries (nothing chains on them), driven lazily by
+    :meth:`PagedKVPool.alloc` when the free list runs short — the cache
+    soaks up idle pool capacity and gives it back on demand.
+    """
+
+    _ROOT = b"root"
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self._full: Dict[bytes, _Entry] = {}
+        self._partials: Dict[bytes, List[_Entry]] = {}
+        self._clock = itertools.count(1)
+
+    def __len__(self) -> int:
+        return len(self._full) + sum(len(v) for v in self._partials.values())
+
+    def clear(self) -> None:
+        """Drop every entry WITHOUT releasing pages — only for
+        :meth:`PagedKVPool.reset`, which recycles the whole pool."""
+        self._full.clear()
+        self._partials.clear()
+
+    @staticmethod
+    def _digest(parent: bytes, tokens, partial: bool) -> bytes:
+        h = hashlib.blake2b(parent, digest_size=16)
+        h.update(b"P" if partial else b"F")
+        h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+        return h.digest()
+
+    # ------------------------------------------------------------ match
+    def match(self, prompt) -> Tuple[List[int], Optional[int], int]:
+        """Longest cached prefix of ``prompt``: returns ``(shared_pages,
+        cow_src, n_tokens)`` — full pages to attach read-only, an
+        optional page to copy-on-write (divergent or capped tail), and
+        the KV entries covered.  ``n_tokens`` is capped at
+        ``len(prompt) - 1``: the last prompt token is always
+        re-prefilled so the final chunk yields the logits token 0
+        samples from (a fully-covered prompt turns its last matched
+        page into the CoW source)."""
+        ps = self.pool.page_size
+        prompt = np.asarray(prompt, np.int32)
+        n = len(prompt)
+        pages: List[int] = []
+        parent = self._ROOT
+        covered = 0
+        while covered + ps <= n:
+            piece = prompt[covered:covered + ps]
+            e = self._full.get(self._digest(parent, piece, False))
+            if e is None or not np.array_equal(e.tokens, piece):
+                break
+            e.last_use = next(self._clock)
+            pages.append(e.page)
+            parent = e.digest
+            covered += ps
+        if covered >= n:               # fully covered: cap at n-1
+            return pages[:-1], pages[-1], n - 1
+        # partial tail: longest common prefix among this chain point's
+        # retired tails (eager CoW attach — the divergence point is
+        # known here, before any write)
+        best, best_m = None, 0
+        for e in self._partials.get(parent, ()):  # noqa: B020
+            tail = prompt[covered:covered + len(e.tokens)]
+            m = _lcp(e.tokens, tail)
+            m = min(m, n - 1 - covered)
+            if m > best_m:
+                best, best_m = e, m
+        if best is not None:
+            best.last_use = next(self._clock)
+            return pages, best.page, covered + best_m
+        return pages, None, covered
+
+    # --------------------------------------------------------- register
+    def register(self, kv_tokens, pages: Sequence[int],
+                 include_partial: bool = False) -> None:
+        """Index a slot's written pages: ``kv_tokens`` are the tokens
+        whose KV the slot holds (prompt, then generated), ``pages`` its
+        block-table row.  Full pages chain-register (immutable once
+        written — decode never revisits them); ``include_partial``
+        additionally registers the trailing partial page (retirement
+        only — a live request still writes its tail).  Existing digests
+        dedup to a recency bump; each NEW entry retains its page."""
+        ps = self.pool.page_size
+        kv_tokens = np.asarray(kv_tokens, np.int32)
+        parent = self._ROOT
+        n_full = len(kv_tokens) // ps
+        for i in range(n_full):
+            piece = kv_tokens[i * ps:(i + 1) * ps]
+            d = self._digest(parent, piece, False)
+            e = self._full.get(d)
+            if e is None:
+                e = _Entry(d, parent, int(pages[i]), piece.copy(), False)
+                self.pool.retain(e.page)
+                self._full[d] = e
+                pe = self._full.get(parent)
+                if pe is not None:
+                    pe.children += 1
+            elif not np.array_equal(e.tokens, piece):
+                return                 # digest collision: stop the chain
+            e.last_use = next(self._clock)
+            parent = d
+        if not include_partial:
+            return
+        tail = kv_tokens[n_full * ps:]
+        if len(tail) == 0 or n_full >= len(pages):
+            return
+        d = self._digest(parent, tail, True)
+        sibs = self._partials.setdefault(parent, [])
+        if any(s.digest == d for s in sibs):
+            for s in sibs:
+                if s.digest == d:
+                    s.last_use = next(self._clock)
+            return
+        e = _Entry(d, parent, int(pages[n_full]), tail.copy(), True)
+        e.last_use = next(self._clock)
+        self.pool.retain(e.page)
+        sibs.append(e)
+        pe = self._full.get(parent)
+        if pe is not None:
+            pe.children += 1
+
+    # ---------------------------------------------------------- evict
+    def evict_lru(self) -> bool:
+        """Evict the least-recently-used *leaf* entry (releasing its
+        page reference).  Returns False when nothing is evictable."""
+        best: Optional[_Entry] = None
+        for e in self._full.values():
+            if e.children == 0 and (best is None
+                                    or e.last_use < best.last_use):
+                best = e
+        for sibs in self._partials.values():
+            for e in sibs:
+                if best is None or e.last_use < best.last_use:
+                    best = e
+        if best is None:
+            return False
+        if best.partial:
+            sibs = self._partials[best.parent]
+            sibs.remove(best)
+            if not sibs:
+                del self._partials[best.parent]
+        else:
+            del self._full[best.digest]
+        pe = self._full.get(best.parent)
+        if pe is not None:
+            pe.children -= 1
+        self.pool.release([best.page])
+        self.pool.stats["prefix_evictions"] += 1
+        return True
+
+
+def _lcp(a, b) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    eq = np.asarray(a[:n]) == np.asarray(b[:n])
+    if eq.all():
+        return n
+    return int(np.argmin(eq))
+
+
+# ----------------------------------------------------------------------
+# host-memory swap tier
+# ----------------------------------------------------------------------
+class HostArena:
+    """Pinned host-memory page arena — the swap tier below the device
+    pool.  One preallocated numpy buffer per attention leaf, shaped
+    like the leaf with the page dim replaced by the arena capacity;
+    arena slot ``i`` across all leaves holds one full logical page.
+
+    ``gather`` pulls device pages down in one ``jax.device_get`` per
+    leaf (a device-side gather first, so only the evicted pages cross
+    the wire); ``scatter`` stages the host bytes back (placed by
+    ``dist.sharding.host_arena_stage_spec`` on a mesh — replicated,
+    matching the never-sharded page dim) and functionally scatters them
+    into freshly allocated pages, inheriting the pool leaves' sharding
+    through the ``.at[pages].set`` operand."""
+
+    def __init__(self, pool: PagedKVPool, capacity: int):
+        self.capacity = capacity
+        self._pool = pool
+        self._free = list(range(capacity - 1, -1, -1))
+        self._bufs: Dict[Tuple[Tuple[str, ...], str], np.ndarray] = {}
+        self._stacked: Dict[Tuple[Tuple[str, ...], str], bool] = {}
+        for path, stacked in pool._attn_paths:
+            block = _tree_get(pool.kv, path)
+            for k, v in block.items():
+                shape = list(v.shape)
+                shape[1 if stacked else 0] = capacity
+                self._bufs[(path, k)] = np.zeros(shape, v.dtype)
+                self._stacked[(path, k)] = stacked
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_room(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def reset(self) -> None:
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    def free(self, slots: Sequence[int]) -> None:
+        self._free.extend(slots)
+
+    def gather(self, kv, pages: Sequence[int]) -> List[int]:
+        """Copy device ``pages`` into fresh arena slots (one blocking
+        ``device_get`` per leaf).  Caller must have checked
+        :meth:`has_room`."""
+        slots = [self._free.pop() for _ in pages]
+        if not pages:
+            return slots
+        idx = jnp.asarray(pages, jnp.int32)
+        for (path, k), buf in self._bufs.items():
+            leaf = _tree_get(kv, path)[k]
+            if self._stacked[(path, k)]:
+                buf[:, slots] = np.asarray(
+                    jax.device_get(jnp.take(leaf, idx, axis=1)))
+            else:
+                buf[slots] = np.asarray(
+                    jax.device_get(jnp.take(leaf, idx, axis=0)))
+        return slots
+
+    def scatter(self, kv, slots: Sequence[int], pages: Sequence[int]):
+        """Upload arena ``slots`` into device ``pages`` (functional —
+        returns the updated cache tree).  The staged blob is committed
+        replicated on a mesh (``host_arena_stage_spec``); the scatter
+        output keeps each leaf's pool sharding."""
+        stage_sharding = None
+        if self._pool.mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.dist.sharding import host_arena_stage_spec
+
+            stage_sharding = NamedSharding(self._pool.mesh,
+                                           host_arena_stage_spec())
+        idx = jnp.asarray(pages, jnp.int32)
+        for (path, k), buf in self._bufs.items():
+            block = _tree_get(kv, path)
+            leaf = block[k]
+            data = buf[:, slots] if self._stacked[(path, k)] else buf[slots]
+            dev = jnp.asarray(data)
+            if stage_sharding is not None:
+                dev = jax.device_put(dev, stage_sharding)
+            if self._stacked[(path, k)]:
+                leaf = leaf.at[:, idx].set(dev)
+            else:
+                leaf = leaf.at[idx].set(dev)
+            kv = _tree_set(kv, path, {**block, k: leaf})
+        return kv
 
 
 class StatePool:
@@ -180,7 +722,9 @@ class StatePool:
     occupant of the slot, so :meth:`reset_slot` overwrites them with the
     block's init state at admission (join-at-prefill; recompute
     preemption re-admits through the same reset, which is what makes the
-    replayed prefix bit-exact).
+    replayed prefix bit-exact — and why archs with recurrent state take
+    the recompute path rather than KV swap: their per-request state rows
+    live outside the page pool the host arena tiers).
 
     The device arrays live in the engine's shared cache tree
     (``PagedKVPool.kv``) — this class only knows *where* the state
@@ -220,10 +764,7 @@ class StatePool:
         (functional — returns the updated cache tree; attention page
         leaves pass through untouched)."""
         for path, rows, stacked in self.entries:
-            node = cache
-            for key in path[:-1]:
-                node = node[key]
-            block = node[path[-1]]
+            block = _tree_get(cache, path)
             if stacked:     # (n_periods, max_slots, ...) — broadcast row
                 new = {k: v.at[:, slot].set(rows[k][0].astype(v.dtype))
                        for k, v in block.items()}
@@ -232,12 +773,3 @@ class StatePool:
                        for k, v in block.items()}
             cache = _tree_set(cache, path, new)
         return cache
-
-
-def _tree_set(tree, path, value):
-    """Functionally replace ``tree[path[0]][path[1]]...`` with value."""
-    if not path:
-        return value
-    new = dict(tree)
-    new[path[0]] = _tree_set(tree[path[0]], path[1:], value)
-    return new

@@ -5,7 +5,8 @@ State machine per request (docs/serving.md):
     WAITING --admit--> PREFILL --last chunk--> RUNNING --finish--> FINISHED
        ^                  |                       |
        +----------------- + ------ preempt ------+
-                 (pages released, recompute on re-admit)
+         (swap: exclusive pages to the host arena, streamed back on
+          resume · recompute: pages released, prefix replayed on re-admit)
 
 Every engine step the scheduler (1) **admits** waiting requests into
 free slots while the pool can back their prompts — join-at-prefill, so a
@@ -35,11 +36,33 @@ HTTP 429 backpressure.  Preemption re-queues are exempt from the cap
 arrival number, so a victim resumes ahead of everything submitted after
 it.
 
+Preemption comes in two flavors (ISSUE-7).  **Swap** (preferred when
+the pool's host arena has room and the arch carries no recurrent state):
+the victim's exclusive pages are gathered to the host tier
+(:meth:`PagedKVPool.swap_out`), shared pages stay device-resident with
+the victim's reference pinned in its :class:`~repro.serve.kvpool.
+SwapRecord`, and tokens/prefill progress are KEPT — resume streams the
+pages back and continues decoding where it stopped, no recompute.
+**Recompute** (the fallback, and the only mode for recurrent-state
+archs): pages and generated tokens are dropped and the prefix is
+replayed on re-admission.  The two are split in :attr:`Scheduler.stats`
+as ``preempt_swap`` / ``preempt_recompute`` and surfaced through
+``ServeEngine.stats`` and the frontend ``/stats`` endpoint.
+
+Admission consults the pool's prefix index
+(:class:`~repro.serve.kvpool.PrefixCache`) when enabled: matching full
+pages of the prompt attach read-only shared (no prefill), a matching
+divergent tail attaches through an eager copy-on-write, and the request
+starts prefill at the first uncovered position.  Matched pages are
+*pinned* (retained) before the fresh-page alloc so the alloc's own LRU
+eviction can never recycle them out from under the admission.
+
 Sampling in the engine is keyed per (request uid, step), so a preempted
 request's recompute reproduces its original tokens exactly — preemption
 is a capacity event, never a quality event — and admission *order*
 (priority vs FIFO) can move when a request runs but never which tokens
-it gets.
+it gets.  Swap-resume is bit-exact for the stronger reason that nothing
+is recomputed at all.
 """
 
 from __future__ import annotations
@@ -48,9 +71,17 @@ import dataclasses
 import enum
 import heapq
 import itertools
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.serve.kvpool import PagedKVPool
+from repro.serve.kvpool import PagedKVPool, SwapRecord
+
+# template of Scheduler.stats — merged into ServeEngine.stats every sync
+_SCHED_STATS_ZERO = {
+    "preempt_swap": 0,        # preserve-KV preemptions (host-arena swap)
+    "preempt_recompute": 0,   # drop-and-replay preemptions
+    "prefix_hit_tokens": 0,   # prompt tokens covered by the prefix index
+    "prefill_tok": 0,         # prompt tokens actually chunk-prefilled
+}
 
 
 class SeqState(enum.Enum):
@@ -80,6 +111,8 @@ class Sequence:
     preemptions: int = 0
     arrival: int = 0            # submission order (keeps sort stable;
     #                             preserved across preemption re-queue)
+    swap: Optional[SwapRecord] = None   # set while swapped to the host
+    #                                     arena (WAITING with KV intact)
 
     def sort_key(self) -> Tuple[float, float, int]:
         pr = getattr(self.req, "priority", 0) or 0
@@ -123,10 +156,17 @@ class _WaitQueue:
 
 class Scheduler:
     def __init__(self, pool: PagedKVPool, max_slots: int,
-                 max_waiting: Optional[int] = None):
+                 max_waiting: Optional[int] = None,
+                 swap: bool = False,
+                 stats: Optional[Dict[str, float]] = None):
         self.pool = pool
         self.max_slots = max_slots
         self.max_waiting = max_waiting
+        # swap preemption needs the pool's host arena AND no recurrent
+        # state rows (those live outside the page pool the arena tiers)
+        # — the engine sets this; a bare Scheduler stays recompute-only
+        self.swap_enabled = swap and pool.arena is not None
+        self.stats = stats if stats is not None else dict(_SCHED_STATS_ZERO)
         self.waiting = _WaitQueue()
         # admission-ordered (PREFILL + RUNNING): append on admit, remove
         # on finish/preempt — running[-1] is always the youngest (the
@@ -159,25 +199,73 @@ class Scheduler:
         (-priority, deadline, arrival), exact FIFO when neither SLA
         field is set.  The queue head blocking on pages stalls admission
         (no head-of-line bypass within the order, so a large request
-        cannot starve).  Admitted requests enter PREFILL; the engine
-        feeds their prompt chunks."""
+        cannot starve).
+
+        A swapped-out head resumes instead: its host-tier pages stream
+        back into fresh pages (:meth:`PagedKVPool.swap_in`), kept shared
+        pages remap in place, and it re-enters PREFILL or RUNNING
+        exactly where it was preempted.  A fresh head first consults the
+        prefix index: matched full pages attach shared, a matched tail
+        attaches via copy-on-write, and ``n_prefilled`` starts at the
+        covered length — the engine only chunk-prefills the remainder.
+        Admitted requests enter PREFILL; the engine feeds their prompt
+        chunks."""
         admitted: List[Sequence] = []
         while self.waiting and self._free_slots:
             seq = self.waiting[0]
+            if seq.swap is not None:
+                slot = self._free_slots[-1]
+                if not self.pool.swap_in(slot, seq.swap):
+                    break                  # pool can't back the resume yet
+                self._free_slots.pop()
+                seq.slot = slot
+                seq.swap = None
+                plen = len(seq.req.prompt)
+                seq.state = (SeqState.RUNNING if seq.n_prefilled >= plen
+                             else SeqState.PREFILL)
+                self.waiting.pop()
+                self.running.append(seq)
+                admitted.append(seq)
+                continue
             need = self._prompt_pages(seq)
             if need > self.pool.capacity:
                 raise RuntimeError(
                     f"request {seq.req.uid}: prompt needs {need} pages but "
                     f"the pool only has {self.pool.capacity} — raise "
                     f"num_pages or max_len")
-            pages = self.pool.alloc(need)
-            if pages is None:
+            shared: List[int] = []
+            cow_src: Optional[int] = None
+            n_reuse = 0
+            if self.pool.prefix is not None and need > 0:
+                shared, cow_src, n_reuse = self.pool.prefix.match(
+                    seq.req.prompt)
+            # pin matched pages BEFORE alloc — alloc's LRU eviction may
+            # drop their index entries, but pinned pages can't recycle
+            pins = shared + ([cow_src] if cow_src is not None else [])
+            for p in pins:
+                self.pool.retain(p)
+            # only the shared pages skip allocation: the CoW
+            # DESTINATION is one of the fresh pages (the source stays
+            # with the index — this slot gets its own copy to write)
+            fresh = self.pool.alloc(need - len(shared))
+            if fresh is None:
+                self.pool.release(pins)
                 break
             self.waiting.pop()
             seq.slot = self._free_slots.pop()
-            self.pool.assign(seq.slot, pages)
+            if shared:       # pins become the slot's read-only references
+                self.pool.assign(seq.slot, shared)
+            if cow_src is not None:
+                cow_page, fresh = fresh[0], fresh[1:]
+                self.pool.assign(seq.slot, [cow_page])
+                self.pool.copy_page(cow_src, cow_page)
+                self.pool.release([cow_src])        # unpin the source
+            if fresh:
+                self.pool.assign(seq.slot, fresh)
             seq.state = SeqState.PREFILL
-            seq.n_prefilled = 0
+            seq.n_prefilled = n_reuse
+            self.stats["prefix_hit_tokens"] += n_reuse
+            self.stats["prefill_tok"] += len(seq.req.prompt) - n_reuse
             self.running.append(seq)
             admitted.append(seq)
         return admitted
@@ -196,21 +284,28 @@ class Scheduler:
     # -------------------------------------------------- decode capacity
     def ensure_decode_capacity(self) -> None:
         """Before a decode step: every decoding request writing position
-        ``n_written`` must have page ``n_written // page_size`` mapped.
-        Pool exhausted → preempt the youngest admitted request and retry
-        (its pages come back to the free list).  No-op for pure
-        recurrent-state archs (nothing pages)."""
+        ``n_written`` must have page ``n_written // page_size`` mapped
+        AND exclusively owned (copy-on-write via
+        :meth:`PagedKVPool.ensure_writable` if a shared page ever backs
+        a write position — the eager CoW at admission makes that the
+        exception, not the rule).  Pool exhausted → preempt the youngest
+        admitted request and retry (its pages come back to the free
+        list).  No-op for pure recurrent-state archs (nothing pages)."""
         if not self.pool.has_kv_pages:
             return
         ps = self.pool.page_size
         for seq in list(self.running):       # oldest first
             if seq.state is not SeqState.RUNNING:
                 continue                     # prefilling, or preempted
-            while self.pool.slot_page_count(seq.slot) <= seq.n_written // ps:
-                page = self.pool.alloc(1)
-                if page is not None:
-                    self.pool.assign(seq.slot, page)
-                    continue
+            while seq.state is SeqState.RUNNING:
+                if self.pool.slot_page_count(seq.slot) <= seq.n_written // ps:
+                    page = self.pool.alloc(1)
+                    if page is not None:
+                        self.pool.assign(seq.slot, page)
+                        continue
+                elif self.pool.ensure_writable(seq.slot, seq.n_written):
+                    break                    # mapped and exclusive
+                # page alloc failed (extension or CoW): make room
                 victim = self.running[-1]    # youngest
                 if victim is seq and len(self.running) == 1:
                     raise RuntimeError(
@@ -301,21 +396,43 @@ class Scheduler:
 
     # --------------------------------------------------------- lifecycle
     def preempt(self, seq: Sequence) -> None:
-        """Recompute-style preemption: drop slot+pages+generated tokens
-        and re-queue with the ORIGINAL arrival number — within its
-        priority class the victim sorts ahead of everything submitted
-        after it (admission is order-respecting, so that is the front
-        of the queue in the FIFO case; deterministic per-uid sampling
-        keys regenerate the identical prefix on re-admission, and
-        re-admission also resets any recurrent-state slot rows, so the
-        replayed prefill starts from the same fresh state).  Exempt
-        from ``max_waiting`` — the request already holds its place."""
+        """Preempt ``seq``, preferring preserve-KV swap over recompute.
+
+        **Swap** (``swap_enabled`` and the host arena has room for the
+        victim's exclusive pages): pages move to the host tier, shared
+        pages stay pinned by the returned record, and prefill progress
+        + generated tokens are KEPT — resume continues mid-stream.
+        **Recompute** otherwise: drop slot+pages+generated tokens; the
+        deterministic per-(uid, step) sampling keys regenerate the
+        identical prefix on re-admission, and re-admission also resets
+        any recurrent-state slot rows, so the replayed prefill starts
+        from the same fresh state.
+
+        Either way the victim re-queues with its ORIGINAL arrival
+        number — within its priority class it sorts ahead of everything
+        submitted after it — and is exempt from ``max_waiting`` (the
+        request already holds its place)."""
+        if self.swap_enabled:
+            record = self.pool.swap_out(seq.slot)
+            if record is not None:
+                # swap_out already cleared the table row; free the slot
+                # without releasing the kept refs (the record owns them)
+                self._free_slots.append(seq.slot)
+                self.running.remove(seq)
+                seq.slot = -1
+                seq.swap = record
+                seq.state = SeqState.WAITING
+                seq.preemptions += 1
+                self.stats["preempt_swap"] += 1
+                self.waiting.push(seq)
+                return
         self._release(seq)
         seq.state = SeqState.WAITING
         seq.n_prefilled = 0
         seq.n_written = 0
         seq.tokens = []
         seq.preemptions += 1
+        self.stats["preempt_recompute"] += 1
         self.waiting.push(seq)
 
     def finish(self, seq: Sequence) -> None:

@@ -207,7 +207,37 @@ def test_paged_attn_default_dispatch():
     got = ops.paged_attention(q, kp, vp, bt, lengths)
     want = ref.paged_attn_ref(q, kp, vp, bt, lengths)
     live = np.asarray(lengths) > 0
-    tol = 0.0 if not ops.FORCE_PALLAS else 2e-5
+    tol = 0.0 if not ops.dispatch_mode().force_pallas else 2e-5
     np.testing.assert_allclose(np.asarray(got)[live],
                                np.asarray(want)[live],
                                rtol=tol, atol=tol)
+
+
+def test_dispatch_override():
+    """override_dispatch scopes dispatch without mutating module state
+    (the ISSUE-7 replacement for tests poking ops.INTERPRET /
+    ops.FORCE_PALLAS globals): the ambient mode is resolved per call,
+    overrides nest and unwind, and force_pallas=True routes the default
+    paged_attention dispatch through the kernel body."""
+    ambient = ops.dispatch_mode()
+    with ops.override_dispatch(force_pallas=True) as m:
+        assert m.force_pallas and ops.dispatch_mode() is m
+        # unspecified fields inherit the ambient mode
+        assert m.interpret == ambient.interpret
+        with ops.override_dispatch(force_pallas=False) as inner:
+            assert not ops.dispatch_mode().force_pallas
+            assert inner.interpret == ambient.interpret
+        assert ops.dispatch_mode() is m
+    assert ops.dispatch_mode() == ambient
+
+    # forced dispatch takes the kernel body: interpret-mode numerics
+    # differ from the oracle only within float tolerance
+    key = jax.random.key(3)
+    q, kp, vp, bt, lengths = _paged_setup(key, 3, 2, 2, 16, 10, 8, 3)
+    want = ref.paged_attn_ref(q, kp, vp, bt, lengths)
+    with ops.override_dispatch(interpret=True, force_pallas=True):
+        got = ops.paged_attention(q, kp, vp, bt, lengths)
+    live = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(got)[live],
+                               np.asarray(want)[live],
+                               rtol=2e-5, atol=2e-5)

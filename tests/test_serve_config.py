@@ -1,0 +1,162 @@
+"""ServeConfig (ISSUE-7 satellite): the one serve-knob surface.
+
+Pins the validation messages, the default resolutions (pool size, swap
+arena), the ``from_args`` CLI mapping through the real launcher parser,
+and the ServeEngine intake back-compat contract — bare keywords, an
+explicit config, and config + keyword overrides all land on the same
+attributes."""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import LM
+from repro.serve import ServeConfig, ServeEngine
+
+
+# ---------------------------------------------------------------- validate
+def test_defaults_validate():
+    cfg = ServeConfig().validate()
+    assert cfg.mode == "continuous"
+    assert cfg.prefix_cache is True
+    assert cfg.host_swap_pages is None      # → pool-sized arena
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("mode", "turbo", "unknown serve mode"),
+    ("max_batch", 0, "max_batch"),
+    ("max_len", 0, "max_len"),
+    ("page_size", 0, "page_size"),
+    ("num_pages", 1, "num_pages"),
+    ("prefill_chunk", 0, "prefill_chunk"),
+    ("steps_per_sync", 0, "steps_per_sync"),
+    ("temperature", -0.5, "temperature"),
+    ("top_k", 0, "top_k"),
+    ("top_p", 0.0, "top_p"),
+    ("top_p", 1.5, "top_p"),
+    ("host_swap_pages", -1, "host_swap_pages"),
+    ("replicas", 0, "replicas"),
+    ("queue_depth", 0, "queue_depth"),
+])
+def test_validate_rejects(field, value, msg):
+    cfg = dataclasses.replace(ServeConfig(), **{field: value})
+    with pytest.raises(ValueError, match=msg):
+        cfg.validate()
+
+
+def test_resolved_num_pages():
+    cfg = ServeConfig(max_batch=4, max_len=100, page_size=16)
+    # ceil(100/16)=7 pages per slot, x4 slots, +1 scrap
+    assert cfg.resolved_num_pages() == 4 * 7 + 1
+    assert dataclasses.replace(cfg, num_pages=9).resolved_num_pages() == 9
+
+
+def test_resolved_swap_pages():
+    cfg = ServeConfig(max_batch=2, max_len=32, page_size=16)
+    assert cfg.resolved_swap_pages() == cfg.resolved_num_pages()
+    assert dataclasses.replace(cfg, host_swap_pages=0
+                               ).resolved_swap_pages() == 0
+    assert dataclasses.replace(cfg, host_swap_pages=7
+                               ).resolved_swap_pages() == 7
+
+
+# ---------------------------------------------------------------- from_args
+def _parse(argv):
+    from repro.launch.serve import build_parser
+
+    return ServeConfig.from_args(build_parser().parse_args(argv))
+
+
+def test_from_args_defaults():
+    cfg = _parse([])
+    assert cfg == ServeConfig(max_len=128)   # launcher default max-len
+
+
+def test_from_args_full_mapping():
+    cfg = _parse([
+        "--serve-mode", "continuous", "--max-batch", "4",
+        "--max-len", "64", "--page-size", "8", "--num-pages", "33",
+        "--prefill-chunk", "16", "--steps-per-sync", "4",
+        "--no-prefix-cache", "--host-swap-pages", "12",
+        "--replicas", "2", "--queue-depth", "16",
+        "--sampling", "top-k", "--top-k", "7", "--temperature", "0.8",
+    ])
+    assert cfg == ServeConfig(
+        max_batch=4, max_len=64, page_size=8, num_pages=33,
+        prefill_chunk=16, steps_per_sync=4, prefix_cache=False,
+        host_swap_pages=12, replicas=2, queue_depth=16,
+        temperature=0.8, top_k=7)
+
+
+def test_from_args_sampling_resolution():
+    # non-greedy sampling with a zero temperature bumps to a live draw
+    cfg = _parse(["--sampling", "top-p", "--top-p", "0.5"])
+    assert cfg.temperature == 1.0 and cfg.top_p == 0.5 and cfg.top_k is None
+    # greedy ignores the top-k/top-p flags entirely
+    cfg = _parse(["--sampling", "greedy", "--top-k", "7"])
+    assert cfg.top_k is None and cfg.temperature == 0.0
+
+
+def test_from_args_validates():
+    with pytest.raises(ValueError, match="num_pages"):
+        _parse(["--num-pages", "1"])
+
+
+# ------------------------------------------------------------ engine intake
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("paper_tiny_lm")
+    model = LM(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def test_engine_bare_keywords_backcompat(tiny):
+    model, params = tiny
+    eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                      page_size=8, mode="static")
+    assert eng.config == ServeConfig(mode="static", max_batch=2,
+                                     max_len=32, page_size=8)
+    assert eng.mode == "static"
+    assert eng.max_batch == 2 and eng.max_len == 32
+
+
+def test_engine_explicit_config(tiny):
+    model, params = tiny
+    cfg = ServeConfig(max_batch=2, max_len=32, page_size=8,
+                      num_pages=9, prefix_cache=True, host_swap_pages=4)
+    eng = ServeEngine(model, params, cfg)
+    assert eng.config is not cfg or eng.config == cfg
+    assert eng.pool.num_pages == 9
+    assert eng.pool.prefix is not None
+    assert eng.pool.arena is not None and eng.pool.arena.capacity == 4
+
+
+def test_engine_config_plus_overrides(tiny):
+    model, params = tiny
+    base = ServeConfig(max_batch=2, max_len=32, page_size=8)
+    eng = ServeEngine(model, params, base, max_batch=3,
+                      prefix_cache=False, host_swap_pages=0)
+    assert eng.config.max_batch == 3                # override wins
+    assert eng.config.max_len == 32                 # base survives
+    assert base.max_batch == 2                      # base not mutated
+    assert eng.pool.prefix is None and eng.pool.arena is None
+
+
+def test_engine_rejects_bad_knobs(tiny):
+    model, params = tiny
+    with pytest.raises(ValueError, match="unknown serve mode"):
+        ServeEngine(model, params, mode="warp")
+    with pytest.raises(TypeError):
+        ServeEngine(model, params, not_a_knob=1)
+
+
+def test_engine_default_pool_sizing(tiny):
+    model, params = tiny
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, page_size=8)
+    cfg = eng.config
+    assert eng.pool.num_pages == cfg.resolved_num_pages() == 2 * 4 + 1
+    # swap defaults on, pool-sized
+    assert eng.pool.arena is not None
+    assert eng.pool.arena.capacity == cfg.resolved_swap_pages()
