@@ -47,6 +47,23 @@ never results); reported: the cached run's ``tok_s``,
 prompt tokens — both CI-gated), ``speedup_vs_noprefix``, and the
 host-arena swap traffic of the pressured run (``swap_in_ms_per_page``).
 
+A fifth leg (``obs_overhead``, ISSUE-8) generates the mixed workload
+on two engines that differ ONLY in observability — one with metrics +
+tracing fully on, one with ``Obs.disabled()`` — interleaved over
+repeated runs.  Token streams must be bit-identical, and the traced
+median wall must stay within ``OBS_OVERHEAD_MAX`` (5%) of disabled —
+a hard failure otherwise (the acceptance bound on instrumentation
+cost); ``obs_overhead_frac`` is reported for trend-watching.
+
+Latency metrics come from the obs registry (ISSUE-8): every leg's
+engines are built around a traced :class:`repro.obs.Obs` bundle,
+TTFT/TPOT/queue-wait percentiles are read from the registry's
+histograms (``registry.reset()`` isolates the measured run from
+warmup) instead of private timing lists, and each leg exports its
+Chrome-trace JSON as ``BENCH_TRACE_serve_*.json`` — matched by the CI
+bench-gate job's ``BENCH_*.json`` artifact upload, ignored by the
+gate diff itself.
+
 All legs build their engines from one :class:`repro.serve.ServeConfig`
 literal — the same object ``launch/serve.py`` constructs from flags.
 
@@ -125,16 +142,19 @@ def _bench_pair(tag: str, model, params, n_requests: int
                 ) -> List["BenchResult"]:
     """Static vs continuous on one model; hard-fails on token mismatch."""
     from benchmarks.common import BenchResult
-    from repro.serve import ServeEngine
-
-    from repro.serve import ServeConfig
+    from repro.obs import Obs
+    from repro.serve import ServeConfig, ServeEngine
 
     reqs = _workload(n_requests, model.cfg.vocab_size)
     config = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
                          page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
                          steps_per_sync=STEPS_PER_SYNC)
-    static = ServeEngine(model, params, config, mode="static")
-    cont = ServeEngine(model, params, config, mode="continuous")
+    # one traced bundle, a track per mode — the leg's trace artifact
+    obs = Obs.create(metrics=True, trace=True)
+    static = ServeEngine(model, params, config, mode="static",
+                         obs=obs.labelled("static"))
+    cont = ServeEngine(model, params, config, mode="continuous",
+                       obs=obs.labelled("continuous"))
     if cont.mode != "continuous":
         raise RuntimeError(f"{tag}: fell back to static — the paged "
                            f"runtime must serve this arch")
@@ -155,6 +175,7 @@ def _bench_pair(tag: str, model, params, n_requests: int
                 f"{tag}: continuous != static greedy tokens for uid "
                 f"{a.uid}: {a.tokens.tolist()} vs {b.tokens.tolist()}")
 
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_pair.json")
     toks = sum(len(r.tokens) for r in rs)
     tps_static = toks / static_s
     tps_cont = toks / cont_s
@@ -187,16 +208,21 @@ OVERSUBSCRIPTION = 2.0         # Poisson arrival rate vs measured capacity
 def _bench_streaming(tag: str, model, params, n_requests: int
                      ) -> List["BenchResult"]:
     """Oversubscribed Poisson-arrival streaming: TTFT / TPOT through a
-    ContinuousSession (the server's code path minus the socket)."""
+    ContinuousSession (the server's code path minus the socket).  All
+    latency metrics come from the engine's obs registry histograms —
+    the engine stamps submit→first-token itself (ISSUE-8), so the
+    harness keeps no timing dicts — and the traced run's lifecycle
+    spans are exported as the leg's Chrome-trace artifact."""
     from benchmarks.common import BenchResult
-    from repro.serve import ServeEngine
-
-    from repro.serve import ServeConfig
+    from repro.obs import Obs
+    from repro.serve import ServeConfig, ServeEngine
 
     reqs = _workload(n_requests, model.cfg.vocab_size)
+    obs = Obs.create(metrics=True, trace=True)
     eng = ServeEngine(model, params, ServeConfig(
         max_batch=MAX_BATCH, max_len=MAX_LEN, page_size=PAGE_SIZE,
-        prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC))
+        prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC),
+        obs=obs)
     eng.generate(reqs)                               # warm the jit caches
     t0 = time.monotonic()
     eng.generate(reqs)
@@ -210,42 +236,38 @@ def _bench_streaming(tag: str, model, params, n_requests: int
                            size=n_requests)
     arrivals = np.cumsum(gaps)
 
+    obs.metrics.reset()           # isolate the measured run from warmup
+    obs.tracer.clear()
     session = eng.session(seed=0)
-    stats0 = dict(eng.stats)
-    arrive, ttft, finish, ntok = {}, {}, {}, {}
     submitted = 0
     start = time.monotonic()
     while submitted < n_requests or session.has_work():
         now = time.monotonic() - start
         while submitted < n_requests and arrivals[submitted] <= now:
-            r = reqs[submitted]
-            session.submit(r)
-            arrive[r.uid] = arrivals[submitted]
+            session.submit(reqs[submitted])
             submitted += 1
         if not session.has_work():                   # idle: next arrival
             time.sleep(max(0.0, arrivals[submitted]
                            - (time.monotonic() - start)))
             continue
-        for ev in session.step():
-            t = time.monotonic() - start
-            if ev.tokens and ev.uid not in ttft:
-                ttft[ev.uid] = t - arrive[ev.uid]
-            if ev.finished:
-                finish[ev.uid] = t
-                ntok[ev.uid] = len(ev.result.tokens)
+        for _ in session.step():                     # engine records all
+            pass                                     # latency metrics
     wall = time.monotonic() - start
 
-    toks = sum(ntok.values())
-    ttfts = np.asarray([ttft[u] for u in sorted(ttft)])
-    tpots = [(finish[u] - arrive[u] - ttft[u]) / (ntok[u] - 1)
-             for u in sorted(finish) if ntok[u] > 1]
-    syncs = eng.stats["host_syncs"] - stats0["host_syncs"]
-    burst = ((eng.stats["device_steps"] - stats0["device_steps"])
-             / max(1, syncs))
+    em = eng.m
+    if em.ttft.count != n_requests:
+        raise RuntimeError(
+            f"{tag}: ttft histogram saw {em.ttft.count} requests, "
+            f"expected {n_requests} — serve instrumentation broke")
+    toks = int(em.tokens.value)
+    syncs = int(em.host_syncs.value)
+    burst = em.device_steps.value / max(1, syncs)
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_streaming.json")
     m = {"tok_s": toks / wall,
-         "ttft_ms_p50": float(np.percentile(ttfts, 50)) * 1e3,
-         "ttft_ms_p95": float(np.percentile(ttfts, 95)) * 1e3,
-         "tpot_ms": float(np.mean(tpots)) * 1e3,
+         "ttft_ms_p50": em.ttft.quantile(0.5) * 1e3,
+         "ttft_ms_p95": em.ttft.quantile(0.95) * 1e3,
+         "tpot_ms": em.tpot.mean * 1e3,
+         "queue_wait_ms_p50": em.queue_wait.quantile(0.5) * 1e3,
          "syncs_per_tok": syncs / max(1, toks),
          "burst": burst}
     return [BenchResult(
@@ -284,6 +306,7 @@ def _bench_prefix(tag: str, model, params, n_requests: int
     pays full prefill per request and swap-preempts under the page
     pressure the ON run's sharing avoids."""
     from benchmarks.common import BenchResult
+    from repro.obs import Obs
     from repro.serve import ServeConfig, ServeEngine
 
     reqs = _prefix_workload(n_requests, model.cfg.vocab_size)
@@ -291,8 +314,11 @@ def _bench_prefix(tag: str, model, params, n_requests: int
                        num_pages=PREFIX_NUM_PAGES,
                        prefill_chunk=PREFILL_CHUNK,
                        steps_per_sync=STEPS_PER_SYNC)
-    off = ServeEngine(model, params, base, prefix_cache=False)
-    on = ServeEngine(model, params, base, prefix_cache=True)
+    obs = Obs.create(metrics=True, trace=True)
+    off = ServeEngine(model, params, base, prefix_cache=False,
+                      obs=obs.labelled("prefix_off"))
+    on = ServeEngine(model, params, base, prefix_cache=True,
+                     obs=obs.labelled("prefix_on"))
 
     off.generate(reqs)                               # warm the jit caches
     on.generate(reqs)
@@ -305,6 +331,7 @@ def _bench_prefix(tag: str, model, params, n_requests: int
                 f"{tag}: prefix-cache changed greedy tokens for uid "
                 f"{a.uid}: {a.tokens.tolist()} vs {b.tokens.tolist()}")
 
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_prefix.json")
     toks = sum(len(r.tokens) for r in r_on)
     tok_s = toks / on_s
     speedup = tok_s / (toks / off_s)
@@ -326,6 +353,64 @@ def _bench_prefix(tag: str, model, params, n_requests: int
         f"swaps_off={off.stats['preempt_swap']}", metrics=m)]
 
 
+# ---------------------------------------------------- obs-overhead leg
+OBS_OVERHEAD_MAX = 0.05        # acceptance: tracing costs < 5% wall
+OVERHEAD_RUNS = 6              # interleaved medians absorb CPU noise
+
+
+def _bench_obs_overhead(tag: str, model, params, n_requests: int
+                        ) -> List["BenchResult"]:
+    """ISSUE-8 acceptance: metrics + tracing fully ON vs
+    ``Obs.disabled()`` on otherwise identical engines — token streams
+    must be bit-identical and the traced median wall within
+    ``OBS_OVERHEAD_MAX`` of disabled (hard failure past it).  Runs are
+    interleaved so drift (thermal, page cache) hits both sides."""
+    from benchmarks.common import BenchResult
+    from repro.obs import Obs
+    from repro.serve import ServeConfig, ServeEngine
+
+    reqs = _workload(n_requests, model.cfg.vocab_size)
+    config = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                         page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+                         steps_per_sync=STEPS_PER_SYNC)
+    off = ServeEngine(model, params, config, obs=Obs.disabled())
+    obs = Obs.create(metrics=True, trace=True)
+    on = ServeEngine(model, params, config, obs=obs)
+    r_off = off.generate(reqs)                       # warm both caches
+    r_on = on.generate(reqs)
+    for a, b in zip(r_off, r_on):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise RuntimeError(
+                f"{tag}: tracing changed tokens for uid {a.uid}: "
+                f"{a.tokens.tolist()} vs {b.tokens.tolist()}")
+
+    walls_off, walls_on = [], []
+    for i in range(OVERHEAD_RUNS):
+        obs.tracer.clear()                 # bound trace memory per run
+        # alternate execution order so slow drift (page cache, thermal)
+        # cancels instead of biasing one side
+        pair = [(off, walls_off), (on, walls_on)]
+        for eng_i, sink in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.monotonic()
+            eng_i.generate(reqs)
+            sink.append(time.monotonic() - t0)
+    off_s = statistics.median(walls_off)
+    on_s = statistics.median(walls_on)
+    frac = on_s / off_s - 1.0
+    if frac > OBS_OVERHEAD_MAX:
+        raise RuntimeError(
+            f"{tag}: observability overhead {frac:.1%} exceeds the "
+            f"{OBS_OVERHEAD_MAX:.0%} acceptance bound "
+            f"(traced {on_s:.3f}s vs disabled {off_s:.3f}s)")
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_obs_overhead.json")
+    toks = sum(len(r.tokens) for r in r_on)
+    m = {"tok_s": toks / on_s, "obs_overhead_frac": frac}
+    return [BenchResult(
+        f"serve_throughput/{tag}/obs_overhead", on_s * 1e6,
+        f"tok_s={m['tok_s']:.1f} overhead={frac:+.1%} "
+        f"(bound {OBS_OVERHEAD_MAX:.0%})", metrics=m)]
+
+
 def run(fast: bool = False) -> List["BenchResult"]:
     from benchmarks.common import trained_model
 
@@ -335,6 +420,7 @@ def run(fast: bool = False) -> List["BenchResult"]:
     results += _bench_pair("lm", model, params, n_requests)
     results += _bench_streaming("lm", model, params, n_requests)
     results += _bench_prefix("lm", model, params, n_requests)
+    results += _bench_obs_overhead("lm", model, params, n_requests)
     # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config
     # through mode="continuous", tokens identical to the dense cache)
     model, params, _ = trained_model("mamba")

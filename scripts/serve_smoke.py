@@ -1,12 +1,19 @@
 """CI serve-smoke: boot the streaming HTTP server on the tiny LM, run
-a stdlib streaming client, and assert the serving front end's two
+a stdlib streaming client, and assert the serving front end's
 load-bearing properties end to end (docs/serving_frontend.md):
 
   1. SSE chunks arrive INCREMENTALLY — more than one data frame per
      request (steps_per_sync=2 forces several sync intervals), each
      flushed before the stream ends;
   2. the concatenated stream is bit-identical to batch-mode
-     ServeEngine.generate output for the same uid/seed.
+     ServeEngine.generate output for the same uid/seed;
+  3. GET /metrics (ISSUE-8) serves the Prometheus exposition across
+     both replica labels of one shared registry, and the series the
+     traffic implies are PRESENT AND NONZERO — ttft histogram count,
+     host syncs, tokens, and (after a sequential duplicate-prompt
+     wave that must hit the same replica's prefix index)
+     serve_prefix_pages_reused_total; the preemption counters must at
+     least be exposed.  /stats carries the registry-derived _summary.
 
 Also smokes /healthz and the 404 path.  Runs in-process (no
 subprocess-orchestration flakiness): server on the asyncio loop,
@@ -27,6 +34,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import LM
+from repro.obs import Obs
 from repro.serve import Request, ServeEngine
 from repro.serve.frontend import Replica, Router, Server, sse_decode
 
@@ -34,10 +42,10 @@ STEPS_PER_SYNC = 2        # several sync intervals per request →
 #                           several SSE frames: the incrementality check
 
 
-def engine(model, params):
+def engine(model, params, obs=None):
     return ServeEngine(model, params, max_batch=4, max_len=64,
                        page_size=8, prefill_chunk=8,
-                       steps_per_sync=STEPS_PER_SYNC)
+                       steps_per_sync=STEPS_PER_SYNC, obs=obs)
 
 
 async def post(host, port, obj):
@@ -57,7 +65,19 @@ async def get(host, port, path):
     w.write(f"GET {path} HTTP/1.1\r\nHost: s\r\n\r\n".encode())
     data = await r.read()
     w.close()
-    return int(data.split()[1])
+    head, _, body = data.partition(b"\r\n\r\n")
+    return int(head.split()[1]), body
+
+
+def series_sum(text, name):
+    """(present, total) for one Prometheus series name across labels."""
+    present, tot = False, 0.0
+    for ln in text.splitlines():
+        if ln == name or ln.startswith(name + "{") \
+                or ln.startswith(name + " "):
+            present = True
+            tot += float(ln.rsplit(" ", 1)[1])
+    return present, tot
 
 
 async def main() -> None:
@@ -74,7 +94,11 @@ async def main() -> None:
             for i in range(4)]
     ref = engine(model, params).generate(reqs, seed=0)
 
-    router = Router([Replica(engine(model, params), name=f"r{i}", seed=0)
+    # ONE shared registry with a replica-labelled view per engine — the
+    # launcher's topology, and what makes /metrics collision-free
+    obs = Obs.create(metrics=True, trace=False)
+    router = Router([Replica(engine(model, params, obs.labelled(f"r{i}")),
+                             name=f"r{i}", seed=0)
                      for i in range(2)])
     srv = Server(router, port=0)
     host, port = await srv.start()
@@ -97,11 +121,57 @@ async def main() -> None:
         print(f"uid {r.uid}: {len(chunks)} frames, {len(toks)} tokens, "
               f"stream == batch")
 
-    assert await get(host, port, "/healthz") == 200
-    assert await get(host, port, "/nope") == 404
+    # sequential duplicate ≥1-page prompts: both idle-tie-break onto r0,
+    # so the second MUST attach the first's cached prefix page
+    shared = [int(t) for t in rng.integers(0, cfg.vocab_size, size=12)]
+    dup = []
+    for uid in (100, 101):
+        status, body = await post(host, port, {
+            "prompt": shared, "max_tokens": 6, "uid": uid})
+        assert status == 200, (uid, status)
+        dup.append(json.loads(body)["tokens"])
+    assert dup[0] == dup[1], f"prefix reuse changed tokens: {dup}"
+
+    # ---- /metrics scrape gate (ISSUE-8 acceptance) --------------------
+    status, body = await get(host, port, "/metrics")
+    assert status == 200
+    text = body.decode()
+    assert 'replica="r0"' in text and 'replica="r1"' in text, \
+        "metrics must carry both replica labels"
+    for name, need_nonzero in (
+            ("serve_host_syncs_total", True),
+            ("serve_tokens_total", True),
+            ("serve_requests_total", True),
+            ("serve_ttft_seconds_count", True),
+            ("serve_prefix_pages_reused_total", True),
+            ("serve_preempt_swap_total", False),
+            ("serve_preempt_recompute_total", False)):
+        present, tot = series_sum(text, name)
+        assert present, f"/metrics is missing {name}"
+        if need_nonzero:
+            assert tot > 0, f"{name} is zero after traffic"
+    present, healthy = series_sum(text, "serve_replica_healthy")
+    assert present and healthy == 2.0, f"healthy gauge: {healthy}"
+    print("metrics scrape OK: required series present and nonzero")
+
+    status, body = await get(host, port, "/stats")
+    assert status == 200
+    stats = json.loads(body)
+    summary = stats.pop("_summary")
+    assert summary["ttft_count"] >= len(reqs) + 2
+    assert summary["ttft_ms_p50"] > 0
+    assert sum(s["tokens"] for s in stats.values()) > 0
+    print(f"/stats summary: ttft_p50={summary['ttft_ms_p50']:.1f}ms "
+          f"over {summary['ttft_count']:.0f} requests")
+
+    status, _ = await get(host, port, "/healthz")
+    assert status == 200
+    status, _ = await get(host, port, "/nope")
+    assert status == 404
     await srv.shutdown(timeout=30)
     router.close()
-    print("serve smoke OK: incremental SSE + batch parity on 2 replicas")
+    print("serve smoke OK: incremental SSE + batch parity + /metrics "
+          "on 2 replicas")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.calibration import CalibrationSet
+from repro.obs import Obs
 
 log = logging.getLogger("repro.pipeline")
 
@@ -147,6 +148,7 @@ class SegmentScheduler:
         calib_shard="auto",
         donate: Optional[bool] = None,
         instrument: bool = False,
+        obs: Optional[Obs] = None,
     ):
         self.mesh = mesh
         self.dp_axes = tuple(a for a in dp_axes
@@ -160,6 +162,21 @@ class SegmentScheduler:
         self.stats = PipelineStats(instrumented=instrument)
         self._instrument = instrument
         self._fns: Dict[Any, Callable] = {}
+        # stage timing flows through the SAME obs registry/tracer the
+        # serve stack uses (ISSUE-8): prune_stage_seconds_total{stage}
+        # mirrors stats.<stage>_s, and every stage window becomes a
+        # trace span when the caller's bundle has tracing on
+        self.obs = obs if obs is not None else Obs.disabled()
+        reg = self.obs.metrics
+        self._stage_s = reg.counter(
+            "prune_stage_seconds_total",
+            "Pipelined prune wall seconds by stage "
+            "(capture/solve/propagate)", ("stage",))
+        self._m_segments = reg.counter(
+            "prune_segments_total", "Segments pruned")
+        self._m_compiles = reg.counter(
+            "prune_compiles_total",
+            "Distinct jitted stage callables built")
 
     # ---------------------------------------------------------- timing
     @contextlib.contextmanager
@@ -175,8 +192,12 @@ class SegmentScheduler:
             if self._instrument or self.strict:
                 for leaf in jax.tree.leaves(ready()):
                     jax.block_until_ready(leaf)
+            t1 = time.monotonic()
             setattr(self.stats, f"{stage}_s",
-                    getattr(self.stats, f"{stage}_s") + time.monotonic() - t0)
+                    getattr(self.stats, f"{stage}_s") + t1 - t0)
+            self._stage_s.labels(stage=stage).inc(t1 - t0)
+            self.obs.tracer.complete(f"prune_{stage}", t0, t1,
+                                     track="prune")
 
     # -------------------------------------------------------- stacking
     def shard_states(self, per_batch_states: Sequence[Any]) -> List[Any]:
@@ -200,6 +221,7 @@ class SegmentScheduler:
         fn = self._fns.get(key)
         if fn is None:
             self.stats.compiles += 1
+            self._m_compiles.inc()
             if capture:
                 fn = jax.jit(
                     lambda p, s, a=seg.apply: a(p, s, capture=True))
@@ -283,6 +305,9 @@ def run_pipelined(
         mesh=engine.mesh,
         calib_shard=engine.calib_shard,
         instrument=instrument,
+        # engines wired with an obs bundle (launch/prune.py) surface
+        # stage seconds through the shared registry; bare engines no-op
+        obs=getattr(engine, "obs", None),
     )
     t_wall = time.monotonic()
 
@@ -338,6 +363,7 @@ def run_pipelined(
         params = seg.set_params(params, seg_params)
         states = sched.propagate(seg, seg_params, states)
         sched.stats.segments += 1
+        sched._m_segments.inc()
 
         if engine.progress_store is not None:
             # the only mid-run host sync: checkpoints materialize params,

@@ -23,6 +23,7 @@ from repro.core.engine import summarize
 from repro.data import DataPipeline, calibration_batches
 from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
+from repro.obs import Obs
 
 
 def load_trained_params(model: LM, ckpt_dir: str):
@@ -67,6 +68,14 @@ def main() -> None:
                     help="accumulate calibration Hessians per data(+pod) "
                          "shard and merge with hessian_allreduce")
     ap.add_argument("--out", default="/tmp/repro_pruned")
+    ap.add_argument("--metrics", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="prune-pipeline stage timing through the obs "
+                         "registry (prune_stage_seconds_total{stage}; "
+                         "docs/observability.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write Chrome-trace JSON of the pipelined "
+                         "capture/solve/propagate stage spans here")
     add_mesh_argument(ap)
     args = ap.parse_args()
 
@@ -87,6 +96,11 @@ def main() -> None:
             blocksize=args.blocksize, gamma=args.gamma,
             progress_store=PruneProgressStore(args.out),
             pipeline=args.pipeline, calib_shard=args.calib_shard)
+        # stage timing + spans flow through the same registry/tracer
+        # the serve stack uses (core.pipeline reads engine.obs)
+        obs = Obs.create(metrics=args.metrics,
+                         trace=args.trace_out is not None)
+        engine.obs = obs
         pruned, reports = engine.run(params, calib)
         s = summarize(reports)
         print(f"pruned {s['linears']} linears, mean sparsity "
@@ -102,6 +116,9 @@ def main() -> None:
     save_pytree(os.path.join(args.out, "pruned_params"), pruned,
                 extra={"method": args.method, "sparsity": args.sparsity})
     print(f"saved to {args.out}/pruned_params")
+    if args.trace_out:
+        n = obs.tracer.export(args.trace_out)
+        print(f"wrote {n} trace events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

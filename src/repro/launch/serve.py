@@ -38,6 +38,7 @@ from repro import configs as cfglib
 from repro.ckpt import load_pytree
 from repro.dist import add_mesh_argument, mesh_context
 from repro.models import LM
+from repro.obs import Obs
 from repro.serve import ServeConfig, ServeEngine, sparsify_params
 from repro.serve.frontend import (CompletionRequest, CompletionResponse,
                                   Replica, Router, run_server,
@@ -113,6 +114,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--queue-depth", type=int, default=None,
                     help="per-replica wait-queue cap; a full queue "
                          "answers 429 instead of buffering unboundedly")
+    # ---------------------------------------------- observability
+    ap.add_argument("--metrics", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="serve metrics registry (counters/gauges/"
+                         "histograms behind /metrics, /stats and the "
+                         "end-of-run report); --no-metrics turns every "
+                         "instrumentation point into a zero-cost no-op "
+                         "(docs/observability.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request-lifecycle spans (admit wait, "
+                         "prefill chunks, decode bursts, preemption/"
+                         "swap/CoW events) and write Chrome-trace JSON "
+                         "here on exit — load in chrome://tracing or "
+                         "Perfetto; token streams are bit-identical "
+                         "with tracing on or off")
     add_mesh_argument(ap)
     return ap
 
@@ -135,19 +151,28 @@ def load_model(args):
     return cfg, model, params
 
 
-def make_engine(model, params, config: ServeConfig) -> ServeEngine:
+def make_engine(model, params, config: ServeConfig,
+                obs: Obs = None) -> ServeEngine:
     # the engine resolves the active mesh: params go resident
     # tensor-parallel, the paged pool / bucket batches shard by the
     # dist rules
-    return ServeEngine(model, params, config)
+    return ServeEngine(model, params, config, obs=obs)
 
 
-def make_router(model, params, config: ServeConfig) -> Router:
+def make_router(model, params, config: ServeConfig,
+                obs: Obs = None) -> Router:
     # every replica shares one seed: a request's stream is identical
     # regardless of which replica serves it (per-(uid, step) keys).
     # Replica reads its wait-queue cap off engine.config.queue_depth.
-    reps = [Replica(make_engine(model, params, config), name=f"r{i}",
-                    seed=0)
+    #
+    # One obs bundle is shared by every replica — each writes its own
+    # ``replica``-labelled series into the single registry, which is
+    # what /metrics scrapes and the end-of-run report reads.
+    if obs is None:
+        obs = Obs.create(metrics=config.metrics, trace=config.trace)
+    reps = [Replica(make_engine(model, params, config,
+                                obs=obs.labelled(f"r{i}")),
+                    name=f"r{i}", seed=0)
             for i in range(config.replicas)]
     return Router(reps)
 
@@ -164,12 +189,13 @@ def _random_requests(cfg, args):
     ]
 
 
-def run_batch(cfg, model, params, args, config: ServeConfig) -> None:
+def run_batch(cfg, model, params, args, config: ServeConfig,
+              obs: Obs) -> None:
     creqs = _random_requests(cfg, args)
     eng = None
     t0 = time.monotonic()
     if config.mode == "continuous":
-        router = make_router(model, params, config)
+        router = make_router(model, params, config, obs=obs)
         eng = router.replicas[0].engine
         if eng.mode != "continuous":
             # arch fell back to static: no sessions — drop to the
@@ -183,7 +209,7 @@ def run_batch(cfg, model, params, args, config: ServeConfig) -> None:
             _summary(results, [r.engine for r in router.replicas], dt)
             return
     if eng is None:
-        eng = make_engine(model, params, config)
+        eng = make_engine(model, params, config, obs=obs.labelled("r0"))
     if eng.mode != config.mode:
         print(f"note: {config.mode} unsupported for {cfg.name} — "
               f"fell back to {eng.mode}")
@@ -195,27 +221,64 @@ def run_batch(cfg, model, params, args, config: ServeConfig) -> None:
     _summary([CompletionResponse.from_result(r) for r in raw], [eng], dt)
 
 
+def _registries(engines):
+    regs = []
+    for e in engines:
+        reg = e.obs.metrics
+        if reg.enabled and all(reg is not x for x in regs):
+            regs.append(reg)
+    return regs
+
+
 def _summary(results, engines, dt) -> None:
+    """End-of-run report, read from the obs registry (ISSUE-8): one
+    source of truth with the /metrics endpoint instead of a parallel
+    sum over per-engine stat dicts."""
     toks = sum(len(r.tokens) for r in results)
     for r in results[:4]:
         print(f"req {r.uid}: {list(r.tokens)}"
               + (f"  [{r.replica}]" if r.replica else ""))
     preempts = sum(r.preemptions for r in results)
-    syncs = sum(e.stats["host_syncs"] for e in engines)
-    burst = (sum(e.stats["device_steps"] for e in engines) / syncs
-             if syncs else 0.0)
+    regs = _registries(engines)
+
+    def total(name: str) -> float:
+        return sum(f.total() for f in (reg.get(name) for reg in regs)
+                   if f is not None)
+
+    syncs = total("serve_host_syncs_total")
+    burst = total("serve_device_steps_total") / syncs if syncs else 0.0
+    slot_steps = total("serve_slot_steps_total")
+    # aggregate utilization: emitted tokens per slot-step occupied —
+    # the registry-level view of Result.utilization
+    util = total("serve_tokens_total") / slot_steps if slot_steps else 0.0
     mode = engines[0].mode
     print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
           f"[{mode}] host-syncs/token {syncs / max(1, toks):.2f} "
-          f"burst {burst:.1f}"
+          f"burst {burst:.1f} util {util:.2f}"
           + (f" preemptions {preempts}" if preempts else ""))
+    from repro.obs.metrics import merge_histograms
+
+    ttft = merge_histograms(
+        [f for f in (reg.get("serve_ttft_seconds") for reg in regs)
+         if f is not None])
+    if ttft is not None and ttft.count:
+        print(f"ttft p50 {ttft.quantile(0.5) * 1e3:.1f}ms "
+              f"p95 {ttft.quantile(0.95) * 1e3:.1f}ms "
+              f"(n={ttft.count})")
 
 
-def run_frontend(cfg, model, params, args, config: ServeConfig) -> None:
+def _export_trace(obs: Obs, path) -> None:
+    if path and obs.tracer.enabled:
+        n = obs.tracer.export(path)
+        print(f"wrote {n} trace events -> {path}")
+
+
+def run_frontend(cfg, model, params, args, config: ServeConfig,
+                 obs: Obs) -> None:
     if config.mode != "continuous":
         raise SystemExit("--server needs the continuous runtime "
                          "(streaming sessions); drop --serve-mode static")
-    router = make_router(model, params, config)
+    router = make_router(model, params, config, obs=obs)
     if router.replicas[0].engine.mode != "continuous":
         raise SystemExit(f"--server unsupported for {cfg.name}: the arch "
                          f"falls back to the static bucketed engine")
@@ -229,12 +292,18 @@ def run_frontend(cfg, model, params, args, config: ServeConfig) -> None:
 def main() -> None:
     args = build_parser().parse_args()
     config = ServeConfig.from_args(args)   # the ONE knob intake point
+    # ONE obs bundle for the whole process: every replica labels its
+    # series into this registry/tracer (docs/observability.md)
+    obs = Obs.create(metrics=config.metrics, trace=config.trace)
     with mesh_context(args.mesh):
         cfg, model, params = load_model(args)
-        if args.server:
-            run_frontend(cfg, model, params, args, config)
-        else:
-            run_batch(cfg, model, params, args, config)
+        try:
+            if args.server:
+                run_frontend(cfg, model, params, args, config, obs)
+            else:
+                run_batch(cfg, model, params, args, config, obs)
+        finally:
+            _export_trace(obs, args.trace_out)
 
 
 if __name__ == "__main__":

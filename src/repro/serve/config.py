@@ -61,6 +61,13 @@ class ServeConfig:
     # front end (launch/serve.py, frontend.Replica/Router)
     replicas: int = 1
     queue_depth: Optional[int] = None   # wait-queue cap → HTTP 429
+    # observability (ISSUE-8, repro.obs): ``metrics`` feeds the
+    # counter/gauge/histogram registry behind ``engine.stats`` and the
+    # frontend /metrics endpoint (off → zero-cost no-ops); ``trace``
+    # records Chrome-trace request-lifecycle spans (--trace-out).
+    # Token streams are bit-identical under every combination.
+    metrics: bool = True
+    trace: bool = False
 
     def validate(self) -> "ServeConfig":
         """The single validation point.  Returns self (chainable)."""
@@ -138,4 +145,6 @@ class ServeConfig:
             host_swap_pages=args.host_swap_pages,
             replicas=args.replicas,
             queue_depth=args.queue_depth,
+            metrics=getattr(args, "metrics", True),
+            trace=getattr(args, "trace_out", None) is not None,
         ).validate()

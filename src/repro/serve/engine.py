@@ -56,28 +56,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.obs import Obs
 from repro.serve import fused
 from repro.serve.config import ServeConfig
+from repro.serve.metrics import ServeMetrics
 
 # every mixer the paged runtime serves: attention (KV pages) plus the
 # recurrent kinds (slot-pooled state — the canonical list lives on LM,
 # which init_paged_cache validates against)
 PAGED_KINDS = ("attn", "attn_local", *LM.STATE_KINDS)
-
-# template of ServeEngine.stats (docstring on the __init__ assignment).
-# The scheduler increments its slice in place (it is handed this very
-# dict) and the pool's counters are merged in every sync interval, so
-# the frontend /stats endpoint sees one flat namespace.
-_STATS_ZERO = {
-    "host_syncs": 0, "device_steps": 0, "prefill_chunks": 0,
-    "tokens": 0, "decode_wall_s": 0.0,
-    # scheduler: preemption flavor split + prefix-reuse accounting
-    "preempt_swap": 0, "preempt_recompute": 0,
-    "prefix_hit_tokens": 0, "prefill_tok": 0,
-    # pool: copy-on-write + host-arena swap traffic
-    "cow_copies": 0, "prefix_evictions": 0,
-    "swap_out_pages": 0, "swap_in_pages": 0, "swap_in_wall_s": 0.0,
-}
 
 
 @dataclasses.dataclass
@@ -140,6 +127,7 @@ class ServeEngine:
         *,
         extra_batch: Optional[Dict[str, jax.Array]] = None,
         mesh=None,
+        obs: Optional[Obs] = None,
         **knobs,
     ):
         """``config`` is the one knob surface (serve.config.ServeConfig).
@@ -191,17 +179,23 @@ class ServeEngine:
         # static-mode fused decode loops, built per early-exit variant on
         # first use (see fused.make_static_burst)
         self._static_bursts: Dict[bool, object] = {}
-        # per-generate runtime counters (host_syncs counts BLOCKING
-        # device readbacks — the quantity the device-resident loop
-        # exists to amortize; device_steps counts fused decode steps;
-        # prefill_chunks counts chunk dispatches (each fused into its
-        # interval's burst — the sync-floor fix means chunks no longer
-        # clamp bursts to K=1, so device_steps / host_syncs stays > 1
-        # under prefill-heavy load); decode_wall_s is wall time inside
-        # burst-dispatch→readback windows only — host scheduling
-        # excluded, so decode_wall_s / device_steps is a step-latency
-        # signal independent of end-to-end tokens/sec)
-        self.stats: Dict[str, float] = dict(_STATS_ZERO)
+        # runtime counters live in the obs registry (ISSUE-8): one
+        # thread-safe namespace the engine, scheduler, pool and frontend
+        # all write — host_syncs counts BLOCKING device readbacks (the
+        # quantity the device-resident loop exists to amortize),
+        # device_steps counts fused decode steps, prefill_chunks counts
+        # chunk dispatches (each fused into its interval's burst — the
+        # sync-floor fix means chunks no longer clamp bursts to K=1),
+        # and decode_wall_s is wall time inside burst-dispatch→readback
+        # windows only, so decode_wall_s / device_steps is a step-
+        # latency signal independent of end-to-end tokens/sec.  The
+        # pre-ISSUE-8 ``self.stats`` dict survives as a property over
+        # the registry; ``generate()`` re-bases it per run.
+        if obs is None:
+            obs = Obs.create(metrics=config.metrics, trace=config.trace)
+        self.obs = obs
+        self.m = ServeMetrics(obs)
+        self._stats_base: Dict[str, float] = {}
 
         cfg = model.cfg
         # MoE is excluded: expert-capacity dropping makes each row's
@@ -226,7 +220,8 @@ class ServeEngine:
                 model, num_pages=config.resolved_num_pages(),
                 page_size=page_size, max_slots=max_batch, max_len=max_len,
                 mesh=mesh, prefix_cache=config.prefix_cache,
-                host_swap_pages=config.resolved_swap_pages())
+                host_swap_pages=config.resolved_swap_pages(),
+                obs=self.obs)
             state = StatePool(model, max_slots=max_batch)
             self.state_pool = state if state.has_state else None
             # swap preemption preserves KV pages only — recurrent-state
@@ -251,6 +246,17 @@ class ServeEngine:
                 template = fused.init_burst_state(max_batch, self._ring)
                 self._state_shardings = named_shardings(
                     mesh, decode_state_specs(template))
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Legacy flat counter dict (engine + scheduler + pool slices),
+        assembled from the obs registry: cumulative since construction,
+        re-based at each ``generate()`` so batch callers still read
+        per-run numbers.  Reading is race-free — the frontend worker
+        threads bump atomic registry counters, not a shared dict."""
+        cur = self.m.snapshot()
+        base = self._stats_base
+        return {k: v - base.get(k, 0) for k, v in cur.items()}
 
     def _place_batch(self, batch: Dict[str, jax.Array]
                      ) -> Dict[str, jax.Array]:
@@ -308,9 +314,17 @@ class ServeEngine:
         out = np.asarray(jax.device_get(out))          # ONE sync per bucket
         n_emitted = np.asarray(jax.device_get(n_emitted))
         steps_run = int(jax.device_get(steps_run))
-        self.stats["decode_wall_s"] += time.monotonic() - t0
-        self.stats["host_syncs"] += 1
-        self.stats["device_steps"] += steps_run
+        t1 = time.monotonic()
+        self.m.decode_wall.inc(t1 - t0)
+        self.m.host_syncs.inc()
+        self.m.device_steps.inc(steps_run)
+        self.m.burst_steps.observe(steps_run)
+        self.m.requests.inc(b)
+        self.m.tokens.inc(int(n_emitted.sum()))
+        self.m.slot_steps.inc(steps_run * b)
+        self.obs.tracer.complete(
+            "static_bucket", t0, t1, track=self.obs.label,
+            args={"batch": b, "prompt_len": plen, "steps": steps_run})
 
         # every request occupies its slot for the whole bucket run —
         # the difference vs n_emitted is the scrap-position waste that
@@ -356,7 +370,9 @@ class ServeEngine:
         """Serve a set of requests (continuous batching; static mode
         buckets by prompt length).  ``self.stats`` afterwards holds the
         run's host-sync / fused-device-step / token counters."""
-        self.stats = dict(_STATS_ZERO)
+        # registry counters are monotonic; re-base the legacy per-run
+        # stats view instead of zeroing them
+        self._stats_base = self.m.snapshot()
         if self.mode == "continuous":
             results = self._generate_continuous(requests, seed)
         else:
@@ -372,7 +388,6 @@ class ServeEngine:
                     results.extend(self._run_bucket(
                         bucket[i:i + self.max_batch], bk))
             results = sorted(results, key=lambda r: r.uid)
-        self.stats["tokens"] = sum(len(r.tokens) for r in results)
         return results
 
 
@@ -411,12 +426,12 @@ class ContinuousSession:
 
         self.engine = engine
         engine.pool.reset()
-        # the scheduler increments its counters directly in the
-        # engine's stats dict — one flat namespace at /stats
+        # scheduler + pool + engine all write the engine's obs registry
+        # — one flat (thread-safe) namespace at /stats and /metrics
         self.sched = Scheduler(engine.pool, engine.max_batch,
                                max_waiting=max_waiting,
                                swap=engine._swap_ok,
-                               stats=engine.stats)
+                               obs=engine.obs)
         self.base_key = jax.random.key(seed)
         self._emitted: Dict[int, int] = {}    # uid -> tokens delivered
 
@@ -448,9 +463,24 @@ class ContinuousSession:
         if not new and not fin:
             return None
         self._emitted[seq.req.uid] = sent + len(new)
+        m = self.engine.m
+        if new and sent == 0 and seq.first_tok_ts == 0.0:
+            # first DELIVERED token (preemption replays are suppressed
+            # above, so this fires exactly once per request)
+            seq.first_tok_ts = time.monotonic()
+            m.ttft.observe(seq.first_tok_ts - seq.submit_ts)
+            m.obs.tracer.instant("first_token", track=m.label,
+                                 args={"uid": seq.req.uid})
         result = None
         if fin:
             self._emitted.pop(seq.req.uid, None)
+            now = time.monotonic()
+            if seq.first_tok_ts and len(seq.tokens) > 1:
+                m.tpot.observe((now - seq.first_tok_ts)
+                               / (len(seq.tokens) - 1))
+            m.obs.tracer.async_end("request", seq.req.uid, track=m.label,
+                                   args={"tokens": len(seq.tokens),
+                                         "preemptions": seq.preemptions})
             result = Result(uid=seq.req.uid,
                             tokens=np.asarray(seq.tokens, np.int32),
                             prompt_len=len(seq.req.prompt),
@@ -561,15 +591,25 @@ class ContinuousSession:
                 self.base_key, p)
             pseq.n_prefilled = min(start + eng.chunk_size, plen)
             pseq.occupied_steps += 1
-            eng.stats["prefill_chunks"] += 1
+            eng.m.prefill_chunks.inc()
+            eng.m.slot_steps.inc()
         else:
             pool.kv, state = eng._burst(
                 eng.params, pool.kv, pool.tables_device(), state,
                 self.base_key)
         st = jax.device_get(state)        # the ONE host sync per interval
-        eng.stats["decode_wall_s"] += time.monotonic() - t0
-        eng.stats["host_syncs"] += 1
-        eng.stats["device_steps"] += k - int(st["steps_left"])
+        t1 = time.monotonic()
+        steps_run = k - int(st["steps_left"])
+        eng.m.decode_wall.inc(t1 - t0)
+        eng.m.host_syncs.inc()
+        eng.m.device_steps.inc(steps_run)
+        eng.m.burst_steps.observe(steps_run)
+        eng.obs.tracer.complete(
+            "prefill_burst" if pseq is not None else "decode_burst",
+            t0, t1, track=eng.obs.label,
+            args={"k": k, "steps": steps_run, "decoding": len(running),
+                  **({"chunk_uid": int(pseq.req.uid)}
+                     if pseq is not None else {})})
         # 5) advance / retire from the packed state blob
         live = list(running)
         if will_activate:
@@ -590,6 +630,7 @@ class ContinuousSession:
                 adv = n - 1 if (will_activate and s is pseq) else n
                 s.n_written += adv
                 s.occupied_steps += adv
+                eng.m.slot_steps.inc(adv)
             if bool(st["done"][s.slot]):
                 if pool.prefix is not None:
                     # retirement: index the generated continuation too
@@ -605,6 +646,5 @@ class ContinuousSession:
             ev = self._event(s)
             if ev is not None:
                 events.append(ev)
-        eng.stats["tokens"] += sum(len(e.tokens) for e in events)
-        eng.stats.update(pool.stats)      # CoW/swap/eviction counters
+        eng.m.tokens.inc(sum(len(e.tokens) for e in events))
         return events

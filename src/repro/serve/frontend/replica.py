@@ -62,6 +62,13 @@ class Replica:
         self.name = name
         self.engine = engine
         self.session = engine.session(seed=seed, max_waiting=max_waiting)
+        # health/queue-depth gauges: callback-backed, evaluated at
+        # /metrics collection time (no writes from the worker loop)
+        m = engine.m
+        m.queue_depth.set_fn(lambda: self.session.depth)
+        m.replica_healthy.set_fn(lambda: 1.0 if self.healthy else 0.0)
+        if engine.pool is not None:
+            m.free_pages.set_fn(lambda: engine.pool.free_pages)
         self._lock = threading.Lock()
         self._subs: Dict[int, Callable[[StreamEvent], None]] = {}
         self._wake = threading.Event()
@@ -108,7 +115,11 @@ class Replica:
         return time.monotonic() - self.last_step < HEALTH_STALL_S
 
     def stats(self) -> Dict[str, float]:
-        return dict(self.engine.stats)
+        # ``engine.stats`` is a property assembled from the obs
+        # registry's atomic counters — reading it here (server thread)
+        # no longer races the worker thread's increments (ISSUE-8; the
+        # old per-engine dict was mutated mid-read)
+        return self.engine.stats
 
     # ------------------------------------------------------------ worker
     def _run(self) -> None:

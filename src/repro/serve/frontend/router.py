@@ -25,6 +25,7 @@ import itertools
 import threading
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.metrics import merge_histograms
 from repro.serve.engine import StreamEvent
 from repro.serve.frontend.protocol import (CompletionRequest,
                                            CompletionResponse,
@@ -117,6 +118,43 @@ class Router:
 
     def stats(self) -> Dict[str, Dict[str, float]]:
         return {r.name: r.stats() for r in self.replicas}
+
+    # ----------------------------------------------------- observability
+    def registries(self) -> List:
+        """The distinct enabled metrics registries behind the replicas
+        — ONE when the launcher shares a bundle across replicas (each
+        replica then writes its own ``replica``-labelled children), one
+        per replica when engines were built independently."""
+        regs: List = []
+        for r in self.replicas:
+            reg = r.engine.obs.metrics
+            if reg.enabled and all(reg is not x for x in regs):
+                regs.append(reg)
+        return regs
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition across every replica registry —
+        the body of the server's ``GET /metrics``."""
+        return "".join(reg.render() for reg in self.registries())
+
+    def summary(self) -> Dict[str, float]:
+        """Request-latency aggregates derived from the registry's
+        histograms (all replicas merged) — the ``_summary`` block on
+        the trace-enriched ``/stats``."""
+        out: Dict[str, float] = {}
+        regs = self.registries()
+        for key, name in (("ttft", "serve_ttft_seconds"),
+                          ("tpot", "serve_tpot_seconds"),
+                          ("queue_wait", "serve_queue_wait_seconds")):
+            fams = [f for f in (reg.get(name) for reg in regs)
+                    if f is not None]
+            h = merge_histograms(fams)
+            if h is None or h.count == 0:
+                continue
+            out[f"{key}_count"] = h.count
+            out[f"{key}_ms_p50"] = h.quantile(0.5) * 1e3
+            out[f"{key}_ms_p95"] = h.quantile(0.95) * 1e3
+        return out
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Stop intake on every replica, then wait for all in-flight

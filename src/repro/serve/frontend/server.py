@@ -10,7 +10,13 @@ Stdlib only (asyncio + hand-rolled HTTP/1.1 — no new deps).  Endpoints:
                          Otherwise a single JSON
                          :class:`protocol.CompletionResponse`.
   GET  /healthz          router health {replica: {healthy, load}}.
-  GET  /stats            per-replica engine counters.
+  GET  /stats            per-replica engine counters, plus a
+                         ``_summary`` block of TTFT/TPOT/queue-wait
+                         aggregates derived from the obs registry's
+                         histograms (docs/observability.md).
+  GET  /metrics          Prometheus text exposition of every serve
+                         series (counters, gauges, histograms) across
+                         all replica registries — the scrape endpoint.
 
 Status mapping: scheduler ``QueueFull`` → **429** (backpressure — the
 wait queue is at its depth cap; retry later), validation → 400,
@@ -115,8 +121,13 @@ class Server:
                 writer.write(_response(
                     200, json.dumps(self.router.health()).encode()))
             elif method == "GET" and path == "/stats":
+                stats = self.router.stats()
+                stats["_summary"] = self.router.summary()
+                writer.write(_response(200, json.dumps(stats).encode()))
+            elif method == "GET" and path == "/metrics":
                 writer.write(_response(
-                    200, json.dumps(self.router.stats()).encode()))
+                    200, self.router.metrics_text().encode(),
+                    ctype="text/plain; version=0.0.4"))
             else:
                 writer.write(_error(404, f"no route {method} {path}"))
             await writer.drain()

@@ -65,15 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# template of PagedKVPool.stats — merged into ServeEngine.stats every
-# sync interval (and so visible at the frontend /stats endpoint)
-_POOL_STATS_ZERO = {
-    "cow_copies": 0,          # ensure_writable / prefix-attach page copies
-    "prefix_evictions": 0,    # index entries evicted to refill the pool
-    "swap_out_pages": 0,      # pages gathered to the host arena
-    "swap_in_pages": 0,       # pages restored from the host arena
-    "swap_in_wall_s": 0.0,    # wall time inside swap-in restores
-}
+from repro.obs import Obs
+from repro.serve.metrics import POOL_KEYS, ServeMetrics
 
 
 def _tree_get(tree, path):
@@ -137,6 +130,7 @@ class PagedKVPool:
         mesh=None,
         prefix_cache: bool = False,
         host_swap_pages: int = 0,
+        obs: Optional[Obs] = None,
     ):
         if num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is scrap)")
@@ -166,7 +160,13 @@ class PagedKVPool:
         self._dirty: set = set()          # slot rows changed since upload
         self._attn_paths = attn_leaf_paths(cfg) if self.has_kv_pages else []
         self._copy_jit = None             # lazy jitted CoW page copy
-        self.stats: Dict[str, float] = dict(_POOL_STATS_ZERO)
+        # CoW/eviction/swap counters live in the obs registry (ISSUE-8);
+        # a bare pool gets a private metrics-only bundle, the engine
+        # hands down its own so everything lands in one namespace.
+        # ``self.stats`` survives as a property over the registry.
+        self.obs = obs if obs is not None else Obs.create(trace=False)
+        self.m = ServeMetrics(self.obs)
+        self._stats_base: Dict[str, float] = {}
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(self) if prefix_cache and self.has_kv_pages
             else None)
@@ -184,6 +184,13 @@ class PagedKVPool:
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Legacy per-run counter view (CoW / eviction / swap slice of
+        the obs registry, re-based at every :meth:`reset`)."""
+        cur = self.m.snapshot()
+        return {k: cur[k] - self._stats_base.get(k, 0) for k in POOL_KEYS}
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages backing ``n_tokens`` KV entries — 0 for pure
@@ -280,7 +287,9 @@ class PagedKVPool:
         self._ref[:] = 0
         self._tables_dev = None
         self._dirty.clear()
-        self.stats = dict(_POOL_STATS_ZERO)
+        # registry counters are monotonic — resetting the pool re-bases
+        # the legacy per-run ``stats`` view instead of zeroing them
+        self._stats_base = self.m.snapshot()
         if self.prefix is not None:
             self.prefix.clear()
         if self.arena is not None:
@@ -327,7 +336,9 @@ class PagedKVPool:
 
             self._copy_jit = jax.jit(copy, donate_argnums=(0,))
         self.kv = self._copy_jit(self.kv, np.int32(src), np.int32(dst))
-        self.stats["cow_copies"] += 1
+        self.m.cow_copies.inc()
+        self.obs.tracer.instant("cow_copy", track=self.obs.label,
+                                args={"src": src, "dst": dst})
 
     def ensure_writable(self, slot: int, pos: int) -> bool:
         """Copy-on-write guard: make the page backing write position
@@ -379,7 +390,9 @@ class PagedKVPool:
         self.block_tables[slot] = 0   # kept refs move to the record
         self._n_pages[slot] = 0
         self._dirty.add(slot)
-        self.stats["swap_out_pages"] += len(host)
+        self.m.swap_out_pages.inc(len(host))
+        self.obs.tracer.instant("swap_out", track=self.obs.label,
+                                args={"slot": slot, "pages": len(host)})
         return SwapRecord(entries=entries)
 
     def swap_in(self, slot: int, record: "SwapRecord") -> bool:
@@ -402,8 +415,12 @@ class PagedKVPool:
                  for tag, s in record.entries]
         self.assign(slot, pages)
         self.arena.free(host_slots)
-        self.stats["swap_in_pages"] += len(host_slots)
-        self.stats["swap_in_wall_s"] += time.monotonic() - t0
+        self.m.swap_in_pages.inc(len(host_slots))
+        self.m.swap_in_wall.inc(time.monotonic() - t0)
+        self.obs.tracer.complete("swap_in", t0, time.monotonic(),
+                                 track=self.obs.label,
+                                 args={"slot": slot,
+                                       "pages": len(host_slots)})
         return True
 
     def drop_swap(self, record: "SwapRecord") -> None:
@@ -605,7 +622,7 @@ class PrefixCache:
         if pe is not None:
             pe.children -= 1
         self.pool.release([best.page])
-        self.pool.stats["prefix_evictions"] += 1
+        self.pool.m.prefix_evictions.inc()
         return True
 
 

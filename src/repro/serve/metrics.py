@@ -1,0 +1,162 @@
+"""Serve-stack metric bindings (docs/observability.md).
+
+:class:`ServeMetrics` binds every serve-runtime series against one
+:class:`repro.obs.Obs` bundle and exposes the bound children as plain
+attributes — the engine/scheduler/pool hot paths do one ``child.inc()``
+with no name lookups.  Binding is get-or-create on the registry, so an
+engine, its pool and its scheduler built from the same bundle share the
+same child objects, and N replicas sharing one registry (the launcher)
+each get their own children via the ``replica`` label.
+
+This module also carries the LEGACY key mapping: the hand-rolled
+``ServeEngine.stats`` / ``PagedKVPool.stats`` dicts the registry
+absorbed (ISSUE-8) survive as properties assembled from
+:meth:`ServeMetrics.snapshot`, so every pre-existing reader — tests,
+benchmarks, the frontend ``/stats`` endpoint — keeps its flat
+dict-of-counters shape while the data lives in one thread-safe place.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.obs import COUNT_BUCKETS, Obs
+
+# legacy ServeEngine.stats keys that are wall-clock seconds (kept float
+# in snapshots; everything else renders as int)
+_WALL_KEYS = ("decode_wall_s", "swap_in_wall_s")
+
+# the PagedKVPool.stats / Scheduler.stats slices of the legacy namespace
+POOL_KEYS = ("cow_copies", "prefix_evictions", "swap_out_pages",
+             "swap_in_pages", "swap_in_wall_s")
+SCHED_KEYS = ("preempt_swap", "preempt_recompute", "prefix_hit_tokens",
+              "prefill_tok")
+
+
+class ServeMetrics:
+    """Bound serve-series children for one replica label."""
+
+    def __init__(self, obs: Obs):
+        self.obs = obs
+        reg = obs.metrics
+        lbl = {"replica": obs.label}
+
+        def c(name: str, help: str):
+            return reg.counter(name, help, ("replica",)).labels(**lbl)
+
+        def g(name: str, help: str):
+            return reg.gauge(name, help, ("replica",)).labels(**lbl)
+
+        def h(name: str, help: str, **kw):
+            return reg.histogram(name, help, ("replica",),
+                                 **kw).labels(**lbl)
+
+        # ---- step loop -------------------------------------------------
+        self.host_syncs = c(
+            "serve_host_syncs_total",
+            "Blocking device readbacks (one per burst interval)")
+        self.device_steps = c(
+            "serve_device_steps_total",
+            "Fused on-device decode steps executed")
+        self.prefill_chunks = c(
+            "serve_prefill_chunks_total",
+            "Prompt chunk dispatches (fused into their interval's burst)")
+        self.tokens = c(
+            "serve_tokens_total", "Tokens emitted to consumers")
+        self.decode_wall = c(
+            "serve_decode_wall_seconds_total",
+            "Wall time inside burst dispatch->readback windows")
+        self.slot_steps = c(
+            "serve_slot_steps_total",
+            "Slot-steps occupied (chunks + decode writes) — "
+            "tokens/slot_steps is aggregate utilization")
+        # ---- admission -------------------------------------------------
+        self.requests = c(
+            "serve_requests_total", "Requests accepted into the scheduler")
+        self.rejected = c(
+            "serve_requests_rejected_total",
+            "Requests refused at the wait-queue depth cap (QueueFull/429)")
+        # ---- preemption / paging --------------------------------------
+        self.preempt_swap = c(
+            "serve_preempt_swap_total",
+            "Preserve-KV preemptions (pages swapped to the host arena)")
+        self.preempt_recompute = c(
+            "serve_preempt_recompute_total",
+            "Drop-and-replay preemptions")
+        self.prefix_hit_tokens = c(
+            "serve_prefix_hit_tokens_total",
+            "Prompt tokens covered by the prefix index at admission")
+        self.prefill_tok = c(
+            "serve_prefill_tokens_total",
+            "Prompt tokens actually chunk-prefilled")
+        self.prefix_pages_reused = c(
+            "serve_prefix_pages_reused_total",
+            "KV pages attached from the prefix index (shared + CoW tail)")
+        self.cow_copies = c(
+            "serve_cow_copies_total", "Copy-on-write page copies")
+        self.prefix_evictions = c(
+            "serve_prefix_evictions_total",
+            "Prefix-index entries evicted to refill the pool")
+        self.swap_out_pages = c(
+            "serve_swap_out_pages_total",
+            "Pages gathered to the host arena")
+        self.swap_in_pages = c(
+            "serve_swap_in_pages_total",
+            "Pages restored from the host arena")
+        self.swap_in_wall = c(
+            "serve_swap_in_seconds_total",
+            "Wall time inside swap-in restores")
+        # ---- latency histograms ---------------------------------------
+        self.ttft = h(
+            "serve_ttft_seconds",
+            "Submit -> first token (time to first token)")
+        self.tpot = h(
+            "serve_tpot_seconds",
+            "Per-token decode latency after the first token")
+        self.queue_wait = h(
+            "serve_queue_wait_seconds", "Submit -> admission wait")
+        self.burst_steps = h(
+            "serve_burst_steps", "Decode steps per device burst",
+            buckets=COUNT_BUCKETS)
+        # ---- gauges (replica.py binds the callbacks) -------------------
+        self.queue_depth = g(
+            "serve_queue_depth", "Requests in flight (waiting + slotted)")
+        self.replica_healthy = g(
+            "serve_replica_healthy",
+            "1 while the replica worker is alive and not stalled")
+        self.free_pages = g(
+            "serve_free_pages", "KV pool free-list length")
+
+        # legacy flat-dict namespace (ServeEngine.stats et al.)
+        self._legacy = {
+            "host_syncs": self.host_syncs,
+            "device_steps": self.device_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "tokens": self.tokens,
+            "decode_wall_s": self.decode_wall,
+            "preempt_swap": self.preempt_swap,
+            "preempt_recompute": self.preempt_recompute,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefill_tok": self.prefill_tok,
+            "cow_copies": self.cow_copies,
+            "prefix_evictions": self.prefix_evictions,
+            "swap_out_pages": self.swap_out_pages,
+            "swap_in_pages": self.swap_in_pages,
+            "swap_in_wall_s": self.swap_in_wall,
+        }
+
+    @property
+    def tracer(self):
+        return self.obs.tracer
+
+    @property
+    def label(self) -> str:
+        return self.obs.label
+
+    def snapshot(self) -> Dict[str, float]:
+        """Current cumulative values under the legacy key names.  The
+        per-run ``ServeEngine.stats`` view is ``snapshot() - base``
+        with the base taken at ``generate()`` start."""
+        return {k: (child.value if k in _WALL_KEYS
+                    else int(child.value))
+                for k, child in self._legacy.items()}

@@ -71,17 +71,12 @@ import dataclasses
 import enum
 import heapq
 import itertools
+import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import Obs
 from repro.serve.kvpool import PagedKVPool, SwapRecord
-
-# template of Scheduler.stats — merged into ServeEngine.stats every sync
-_SCHED_STATS_ZERO = {
-    "preempt_swap": 0,        # preserve-KV preemptions (host-arena swap)
-    "preempt_recompute": 0,   # drop-and-replay preemptions
-    "prefix_hit_tokens": 0,   # prompt tokens covered by the prefix index
-    "prefill_tok": 0,         # prompt tokens actually chunk-prefilled
-}
+from repro.serve.metrics import SCHED_KEYS, ServeMetrics
 
 
 class SeqState(enum.Enum):
@@ -113,6 +108,12 @@ class Sequence:
     #                             preserved across preemption re-queue)
     swap: Optional[SwapRecord] = None   # set while swapped to the host
     #                                     arena (WAITING with KV intact)
+    # observability stamps (time.monotonic; 0.0 = not yet): queue-wait
+    # is submit→first admission, TTFT is submit→first emitted token —
+    # both survive preemption (re-queues keep the original stamps)
+    submit_ts: float = 0.0
+    first_tok_ts: float = 0.0
+    admitted_once: bool = False
 
     def sort_key(self) -> Tuple[float, float, int]:
         pr = getattr(self.req, "priority", 0) or 0
@@ -158,7 +159,7 @@ class Scheduler:
     def __init__(self, pool: PagedKVPool, max_slots: int,
                  max_waiting: Optional[int] = None,
                  swap: bool = False,
-                 stats: Optional[Dict[str, float]] = None):
+                 obs: Optional[Obs] = None):
         self.pool = pool
         self.max_slots = max_slots
         self.max_waiting = max_waiting
@@ -166,7 +167,10 @@ class Scheduler:
         # state rows (those live outside the page pool the arena tiers)
         # — the engine sets this; a bare Scheduler stays recompute-only
         self.swap_enabled = swap and pool.arena is not None
-        self.stats = stats if stats is not None else dict(_SCHED_STATS_ZERO)
+        # counters live in the obs registry (ISSUE-8); a bare Scheduler
+        # inherits its pool's bundle so both write one namespace
+        self.obs = obs if obs is not None else pool.obs
+        self.m = ServeMetrics(self.obs)
         self.waiting = _WaitQueue()
         # admission-ordered (PREFILL + RUNNING): append on admit, remove
         # on finish/preempt — running[-1] is always the youngest (the
@@ -175,14 +179,28 @@ class Scheduler:
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._arrivals = itertools.count()
 
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Legacy preemption/prefix counter view (cumulative slice of
+        the obs registry)."""
+        cur = self.m.snapshot()
+        return {k: cur[k] for k in SCHED_KEYS}
+
     # ------------------------------------------------------------ intake
     def submit(self, req) -> Sequence:
         if (self.max_waiting is not None
                 and len(self.waiting) >= self.max_waiting):
+            self.m.rejected.inc()
             raise QueueFull(
                 f"wait queue at its depth cap ({self.max_waiting}) — "
                 f"retry later")
-        seq = Sequence(req=req, arrival=next(self._arrivals))
+        seq = Sequence(req=req, arrival=next(self._arrivals),
+                       submit_ts=time.monotonic())
+        self.m.requests.inc()
+        self.obs.tracer.async_begin("request", req.uid,
+                                    track=self.obs.label,
+                                    args={"prompt_len": len(req.prompt),
+                                          "max_new": req.max_new_tokens})
         self.waiting.push(seq)
         return seq
 
@@ -192,6 +210,18 @@ class Scheduler:
     # --------------------------------------------------------- admission
     def _prompt_pages(self, seq: Sequence) -> int:
         return self.pool.pages_for(len(seq.req.prompt))
+
+    def _note_admitted(self, seq: Sequence) -> None:
+        """Queue-wait accounting on FIRST admission only (a preemption
+        re-queue is a capacity event, not another queue wait)."""
+        if seq.admitted_once:
+            return
+        seq.admitted_once = True
+        now = time.monotonic()
+        self.m.queue_wait.observe(now - seq.submit_ts)
+        self.obs.tracer.complete("queue_wait", seq.submit_ts, now,
+                                 track=self.obs.label,
+                                 args={"uid": seq.req.uid})
 
     def admit(self) -> List[Sequence]:
         """Join-at-prefill: move waiting requests into free slots while
@@ -226,6 +256,10 @@ class Scheduler:
                 self.waiting.pop()
                 self.running.append(seq)
                 admitted.append(seq)
+                self._note_admitted(seq)
+                self.obs.tracer.instant(
+                    "swap_resume", track=self.obs.label,
+                    args={"uid": seq.req.uid})
                 continue
             need = self._prompt_pages(seq)
             if need > self.pool.capacity:
@@ -264,10 +298,18 @@ class Scheduler:
                 self.pool.assign(seq.slot, fresh)
             seq.state = SeqState.PREFILL
             seq.n_prefilled = n_reuse
-            self.stats["prefix_hit_tokens"] += n_reuse
-            self.stats["prefill_tok"] += len(seq.req.prompt) - n_reuse
+            self.m.prefix_hit_tokens.inc(n_reuse)
+            self.m.prefill_tok.inc(len(seq.req.prompt) - n_reuse)
+            if n_reuse:
+                reused = len(shared) + (1 if cow_src is not None else 0)
+                self.m.prefix_pages_reused.inc(reused)
+                self.obs.tracer.instant(
+                    "prefix_attach", track=self.obs.label,
+                    args={"uid": seq.req.uid, "pages": reused,
+                          "tokens": n_reuse})
             self.running.append(seq)
             admitted.append(seq)
+            self._note_admitted(seq)
         return admitted
 
     def next_prefill(self) -> Optional[Sequence]:
@@ -423,7 +465,11 @@ class Scheduler:
                 seq.swap = record
                 seq.state = SeqState.WAITING
                 seq.preemptions += 1
-                self.stats["preempt_swap"] += 1
+                self.m.preempt_swap.inc()
+                self.obs.tracer.instant(
+                    "preempt_swap", track=self.obs.label,
+                    args={"uid": seq.req.uid,
+                          "host_pages": record.n_host})
                 self.waiting.push(seq)
                 return
         self._release(seq)
@@ -432,7 +478,9 @@ class Scheduler:
         seq.n_written = 0
         seq.tokens = []
         seq.preemptions += 1
-        self.stats["preempt_recompute"] += 1
+        self.m.preempt_recompute.inc()
+        self.obs.tracer.instant("preempt_recompute", track=self.obs.label,
+                                args={"uid": seq.req.uid})
         self.waiting.push(seq)
 
     def finish(self, seq: Sequence) -> None:
