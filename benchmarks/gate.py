@@ -20,6 +20,12 @@ Gate policy (docs in benchmarks/README.md):
     under serve_throughput's oversubscribed streaming leg): HARD
     failure when it RISES more than ``--threshold`` (lower is better —
     the serving front end's headline SLA metric, ISSUE-6);
+  - **KV pool footprint** (``kv_pool_bytes_per_tok`` — pool HBM bytes
+    per token of KV capacity, serve_throughput sparse/kv_int8 legs,
+    ISSUE-9): HARD failure when it RISES more than ``--threshold``
+    (lower is better — a rise means int8 page packing or the pool
+    sizing regressed).  The sparse leg's ``step_ms_p50`` rides the
+    existing step-latency gate by key name;
   - everything else (utilization, syncs/token, speedup ratios, prune
     wall-clock) is reported as an informational delta only: wall-clocks
     and thin speedup margins vary too much across runner generations to
@@ -40,10 +46,12 @@ import sys
 # prefix leg's fraction of prompt tokens served from the prefix cache
 # instead of prefilled (ISSUE-7 — a drop means reuse broke)
 HARD_METRICS = ("tok_s", "prefill_tok_saved_frac")
-# lower is better, gated on rises: p50 fused-step latency (ISSUE-5) and
+# lower is better, gated on rises: p50 fused-step latency (ISSUE-5),
 # p50 time-to-first-token under the oversubscribed streaming workload
-# (ISSUE-6 — queueing + chunked prefill latency the front end exposes)
-HARD_METRICS_LOWER = ("step_ms_p50", "ttft_ms_p50")
+# (ISSUE-6 — queueing + chunked prefill latency the front end exposes),
+# and pool HBM bytes per KV-capacity token (ISSUE-9 — int8 page packing)
+HARD_METRICS_LOWER = ("step_ms_p50", "ttft_ms_p50",
+                      "kv_pool_bytes_per_tok")
 
 
 def _load(path: str) -> dict:
@@ -73,7 +81,8 @@ def compare(current: dict, baseline: dict, threshold: float):
                 failures.append(tag + f"  [> {threshold:.0%} regression]")
             elif key in HARD_METRICS_LOWER and delta > threshold:
                 failures.append(
-                    tag + f"  [> {threshold:.0%} step-latency regression]"
+                    tag + f"  [> {threshold:.0%} lower-is-better "
+                          f"regression]"
                 )
             lines.append(tag)
     return failures, lines

@@ -1,10 +1,19 @@
 """Kernel micro-benchmarks: wall time (CPU interpret — structural only)
 plus the *derived* quantity that matters on TPU: weight-bytes saved by
 2:4 packing, Hessian FLOPs, combo-scoring throughput, attention memory.
+
+``python -m benchmarks.kernelbench --smoke`` is the CI ``kernel-bench``
+job's entry point: it asserts nm_spmm (tiled + decode-shaped epilogue)
+and paged_attn (fp32 + int8-KV) parity against the ``kernels/ref.py``
+oracles under BOTH dispatch modes — the jnp oracle path and the Pallas
+bodies (interpret off-TPU) — then writes ``BENCH_KERNELS_<sha>.json``
+with the timing table and a ``parity`` block, the artifact the job
+uploads.  Any mismatch raises, failing the job.
 """
 
 from __future__ import annotations
 
+import sys
 import time
 from typing import List
 
@@ -12,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import BenchResult
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 
 def _time(fn, *args, reps=3):
@@ -23,18 +32,43 @@ def _time(fn, *args, reps=3):
     return (time.monotonic() - t0) / reps * 1e6
 
 
+def _rand_24(key, k: int, n: int):
+    """A random 2:4-sparse (K, N) weight: keep the 2 largest of every
+    4-group along K.  Returns (dense, vals, idx)."""
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    gt = w.reshape(k // 4, 4, n).transpose(0, 2, 1)
+    _, drop = jax.lax.top_k(-jnp.abs(gt), 2)
+    mask = jax.nn.one_hot(drop, 4).sum(-2) > 0
+    wg = jnp.where(mask, 0, gt).transpose(0, 2, 1).reshape(k, n)
+    vals, pidx = ops.compress_24(wg)
+    return wg, vals, pidx
+
+
+def _paged_case(key, quantized: bool):
+    """A small paged-GQA decode problem; optionally int8 pages+scales."""
+    b, kvh, g, hd, page, p_max = 2, 2, 2, 16, 8, 3
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, kvh, g, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (p_max * b + 1, page, kvh, hd))
+    vp = jax.random.normal(ks[2], (p_max * b + 1, page, kvh, hd))
+    bt = jnp.arange(1, b * p_max + 1, dtype=jnp.int32).reshape(b, p_max)
+    lengths = jnp.array([p_max * page, p_max * page - 3], jnp.int32)
+    if not quantized:
+        return q, kp, vp, bt, lengths, None, None
+    k_s = jnp.max(jnp.abs(kp), axis=-1) / 127.0
+    v_s = jnp.max(jnp.abs(vp), axis=-1) / 127.0
+    kq = jnp.round(kp / jnp.maximum(k_s, 1e-8)[..., None]).astype(jnp.int8)
+    vq = jnp.round(vp / jnp.maximum(v_s, 1e-8)[..., None]).astype(jnp.int8)
+    return q, kq, vq, bt, lengths, k_s, v_s
+
+
 def run(fast: bool = False) -> List[BenchResult]:
     out: List[BenchResult] = []
     key = jax.random.key(0)
 
     # nm_spmm: derived = weight-HBM-bytes dense vs packed
     k, n, m = 256, 256, 128
-    w = jax.random.normal(key, (k, n), jnp.float32)
-    gt = w.reshape(k // 4, 4, n).transpose(0, 2, 1)
-    _, idx = jax.lax.top_k(-jnp.abs(gt), 2)
-    mask = jax.nn.one_hot(idx, 4).sum(-2) > 0
-    wg = jnp.where(mask, 0, gt).transpose(0, 2, 1).reshape(k, n)
-    vals, pidx = ops.compress_24(wg)
+    _, vals, pidx = _rand_24(key, k, n)
     x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
     us = _time(lambda a: ops.nm_matmul(a, vals, pidx), x)
     dense_b = k * n * 2                       # bf16 dense
@@ -42,6 +76,23 @@ def run(fast: bool = False) -> List[BenchResult]:
     out.append(BenchResult(
         "kernel/nm_spmm", us,
         f"weight_bytes {dense_b}→{packed_b:.0f} ({dense_b / packed_b:.2f}x)"))
+
+    # nm_spmm decode shape (ISSUE-9): skinny M, fused bias+silu epilogue
+    xd = jax.random.normal(jax.random.fold_in(key, 3), (1, k))
+    bias = jax.random.normal(jax.random.fold_in(key, 4), (n,))
+    us = _time(lambda a: ops.nm_matmul(a, vals, pidx, bias,
+                                       activation="silu"), xd)
+    out.append(BenchResult(
+        "kernel/nm_spmm_decode", us,
+        f"m=1 epilogue=bias+silu weight_bytes {dense_b / packed_b:.2f}x"))
+
+    # paged_attn decode (ISSUE-9): fp32 vs int8 pages — bytes gathered
+    q, kp, vp, bt, lengths, _, _ = _paged_case(key, quantized=False)
+    us = _time(lambda a: ops.paged_attention(a, kp, vp, bt, lengths), q)
+    tok_b = 2 * kp.shape[2] * kp.shape[3]
+    out.append(BenchResult(
+        "kernel/paged_attn", us,
+        f"kv_bytes/tok fp32={tok_b * 4} int8={tok_b * (1 + 4 / 16):.0f}"))
 
     # hessian_accum: derived = GFLOP per call
     xh = jax.random.normal(key, (128, 512))
@@ -65,3 +116,88 @@ def run(fast: bool = False) -> List[BenchResult]:
         "kernel/flash_attn", us,
         f"dense_scores_bytes={2 * 256 * 256 * 4}→tiled"))
     return out
+
+
+# -------------------------------------------------- CI parity smoke
+def smoke() -> dict:
+    """nm_spmm / paged_attn vs the ref oracles, both dispatch modes.
+
+    Returns the ``parity`` dict for BENCH_KERNELS_<sha>.json: max |err|
+    per (kernel, mode).  Raises AssertionError on any out-of-tolerance
+    cell — the CI kernel-bench job's failure signal."""
+    key = jax.random.key(7)
+    parity = {}
+
+    def check(name: str, got, want, tol: float):
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        parity[name] = err
+        assert err <= tol, f"{name}: max|err|={err:.3e} > tol={tol:.1e}"
+
+    # dispatch modes: jnp oracle vs forced Pallas (interpret off-TPU)
+    modes = (("oracle", dict(force_pallas=False)),
+             ("pallas", dict(force_pallas=True)))
+
+    # nm_spmm cases: tiled prefill M, decode M=1 with fused epilogue,
+    # K not a multiple of the 128 tile (wrapper zero-pads)
+    cases = (("tiled_m256", 256, 256, 256, None, None),
+             ("decode_m1_silu", 1, 256, 384, "bias", "silu"),
+             ("decode_kpad", 4, 200, 256, "bias", "gelu"))
+    for ci, (cname, m, k, n, with_bias, act) in enumerate(cases):
+        kk = jax.random.fold_in(key, ci)
+        _, vals, pidx = _rand_24(kk, k, n)
+        x = jax.random.normal(jax.random.fold_in(kk, 1), (m, k))
+        bias = (jax.random.normal(jax.random.fold_in(kk, 2), (n,))
+                if with_bias else None)
+        want = ref.nm_spmm_ref(x, vals, pidx, bias=bias, activation=act)
+        for mname, kw in modes:
+            with ops.override_dispatch(**kw):
+                got = ops.nm_matmul(x, vals, pidx, bias, activation=act)
+            check(f"nm_spmm/{cname}/{mname}", got, want, 1e-4)
+
+    # paged_attn cases: fp32 pages and the int8 dequantize-at-gather path
+    for qname, quant in (("fp32", False), ("int8", True)):
+        q, kp, vp, bt, lengths, k_s, v_s = _paged_case(
+            jax.random.fold_in(key, 11), quantized=quant)
+        want = ref.paged_attn_ref(q, kp, vp, bt, lengths,
+                                  k_scale=k_s, v_scale=v_s)
+        for mname, kw in modes:
+            with ops.override_dispatch(**kw):
+                got = ops.paged_attention(q, kp, vp, bt, lengths,
+                                          k_scale=k_s, v_scale=v_s)
+            check(f"paged_attn/{qname}/{mname}", got, want, 1e-4)
+    return parity
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks.run import _git_sha, write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI parity gate: kernels vs ref oracles under "
+                         "both dispatch modes + BENCH_KERNELS_<sha>.json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="output path (default BENCH_KERNELS_<sha>.json)")
+    args = ap.parse_args(argv)
+
+    results = run(fast=args.smoke)
+    print("name,us_per_call,derived")
+    for r in results:
+        print(r.csv())
+    if not args.smoke and not args.json:
+        return
+    parity = smoke()
+    for name in sorted(parity):
+        print(f"# parity {name}: max|err|={parity[name]:.3e}",
+              file=sys.stderr)
+    results.append(BenchResult(
+        "kernel/parity", 0.0,
+        f"{len(parity)} cells, max|err|={max(parity.values()):.3e}",
+        metrics={k.replace("/", "_"): v for k, v in parity.items()}))
+    write_json(args.json or f"BENCH_KERNELS_{_git_sha()}.json", results)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,13 @@
 """§Roofline reporting: aggregate experiments/dryrun.jsonl into the
-per-(arch × shape × mesh) three-term roofline table.
+per-(arch × shape × mesh) three-term roofline table, plus the ISSUE-9
+serve bytes-moved model (compressed 2:4 weights + int8 KV).
 
 The dry-run (launch/dryrun.py) must have produced the JSONL; this module
 just reduces it (no jax device work) so `-m benchmarks.run` stays fast.
-"""
+The serve-bytes section is pure arithmetic on the tiny-LM config — the
+HBM-traffic bound a weight-/KV-bound decode step obeys on hardware,
+reported next to the measured serve_throughput legs because the CPU
+interpret oracle cannot exhibit it (docs/serving.md)."""
 
 from __future__ import annotations
 
@@ -28,11 +32,57 @@ def load_records(path: str = DRYRUN_PATH):
     return list(recs.values())
 
 
+def serve_bytes(config_name: str = "paper_tiny_lm") -> List[BenchResult]:
+    """Decode-step HBM traffic model, dense vs compressed (ISSUE-9).
+
+    Weight traffic: every decode step streams all projection matrices
+    once.  2:4 packing replaces K·N·4B (f32) with K/2·N·(4+1)B =
+    0.625× (idx stored int8 here; 2-bit idx on real TPU → 0.5625×).
+    KV traffic: a decode token reads the whole live KV history once —
+    int8 pages cost 1B + 4B/head_dim-per-row scale vs 4B fp32.  Biases,
+    norms, embeddings keep their bytes (the embedding table is read
+    per-token, not per-weight-stream, and is left dense)."""
+    from repro.configs import get_config
+
+    c = get_config(config_name)
+    d, f = c.d_model, c.d_ff
+    hd = c.head_dim or d // c.num_heads
+    kvd = c.num_kv_heads * hd
+    # per-layer matmul weight counts (swiglu: wi+wg+wo; attn: q,k,v,o)
+    per_layer = (d * d + 2 * d * kvd + d * d) + (2 * d * f + f * d)
+    w_dense = c.num_layers * per_layer * 4
+    w_packed_f32 = w_dense / 4 * 2.5            # vals f32/2 + idx int8
+    w_packed_tpu = w_dense / 4 * 2.25           # 2-bit idx packing
+    kv_fp32 = 2 * c.num_layers * kvd * 4        # bytes per cached token
+    kv_int8 = 2 * c.num_layers * kvd * (1 + 4 / hd)
+    out = [
+        BenchResult(
+            "roofline/serve_bytes/weights", 0.0,
+            f"dense={w_dense / 1e6:.2f}MB/step "
+            f"packed_f32={w_packed_f32 / 1e6:.2f}MB "
+            f"({w_packed_f32 / w_dense:.4f}x, "
+            f"modeled {w_dense / w_packed_f32:.2f}x) "
+            f"packed_2bit={w_packed_tpu / w_dense:.4f}x "
+            f"(modeled {w_dense / w_packed_tpu:.2f}x)",
+            metrics={"weight_bytes_frac_f32": w_packed_f32 / w_dense,
+                     "weight_bytes_frac_2bit": w_packed_tpu / w_dense,
+                     "modeled_speedup_f32": w_dense / w_packed_f32}),
+        BenchResult(
+            "roofline/serve_bytes/kv", 0.0,
+            f"fp32={kv_fp32}B/tok int8={kv_int8:.0f}B/tok "
+            f"({kv_int8 / kv_fp32:.4f}x, capacity "
+            f"{kv_fp32 / kv_int8:.2f}x at fixed HBM)",
+            metrics={"kv_bytes_frac": kv_int8 / kv_fp32,
+                     "kv_capacity_x": kv_fp32 / kv_int8}),
+    ]
+    return out
+
+
 def run(fast: bool = False) -> List[BenchResult]:
     recs = load_records()
-    out: List[BenchResult] = []
+    out: List[BenchResult] = serve_bytes()
     if not recs:
-        return [BenchResult(
+        return out + [BenchResult(
             "roofline/missing", 0.0,
             "run `python -m repro.launch.dryrun --all --multi-pod both "
             "--out experiments/dryrun.jsonl` first")]

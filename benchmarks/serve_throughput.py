@@ -411,6 +411,166 @@ def _bench_obs_overhead(tag: str, model, params, n_requests: int
         f"(bound {OBS_OVERHEAD_MAX:.0%})", metrics=m)]
 
 
+# ------------------------------------------- sparse / int8-KV legs (ISSUE-9)
+KV_MATCH_MIN = 0.60            # int8-KV greedy agreement floor (see docs)
+
+
+def _tree_bytes(tree) -> int:
+    """HBM bytes of a param tree (packed {"vals","idx"} dicts contribute
+    their vals+idx leaves — tree_leaves descends into them)."""
+    import jax
+
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _pruned_24(model, params):
+    """2:4-prune (SM) the trained tiny LM — the checkpoint the sparse
+    serve path exists for."""
+    from repro.core import PruningEngine
+    from repro.data import calibration_batches
+
+    calib = calibration_batches(model.cfg, n_samples=8, seq_len=64,
+                                batch=8)
+    eng = PruningEngine(model, "2:4", method="SM", blocksize=64)
+    pruned, _ = eng.run(params, calib)
+    return pruned
+
+
+def _kv_bytes_per_tok(eng) -> float:
+    """Pool HBM bytes per token of KV capacity (page 0 is scrap)."""
+    cap = (eng.config.resolved_num_pages() - 1) * eng.config.page_size
+    return eng.pool.pool_bytes() / max(1, cap)
+
+
+def _bench_sparse(tag: str, model, params, n_requests: int
+                  ) -> List["BenchResult"]:
+    """Compressed-weight serving (the ISSUE-9 tentpole): the same
+    2:4-pruned checkpoint served dense (``sparse_weights="off"`` — zeros
+    shipped as f32) vs compressed (``"auto"`` — the engine packs 2:4
+    leaves at load, HBM holds only (vals, idx), decode projections
+    dispatch the nm_spmm kernel).  Greedy tokens must match bit-exact:
+    the decompress is an exact inverse of the pack.  ``weight_bytes_frac``
+    is the measured HBM param-bytes ratio (packed/dense) and
+    ``modeled_speedup`` the weight-traffic roofline bound it implies for
+    a weight-bound decode step — reported alongside the honest wall
+    numbers because the CPU jnp oracle *decompresses* per call and so
+    cannot show the bytes win (benchmarks/roofline.py carries the
+    arithmetic; docs/serving.md the caveat)."""
+    from benchmarks.common import BenchResult
+    from repro.obs import Obs
+    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve.sparse import compressed_param_tree
+
+    pruned = _pruned_24(model, params)
+    reqs = _workload(n_requests, model.cfg.vocab_size)
+    base = dict(max_batch=MAX_BATCH, max_len=MAX_LEN, page_size=PAGE_SIZE,
+                prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC)
+    obs = Obs.create(metrics=True, trace=True)
+    dense = ServeEngine(model, pruned,
+                        ServeConfig(sparse_weights="off", **base),
+                        obs=obs.labelled("dense"))
+    sparse = ServeEngine(model, pruned,
+                         ServeConfig(sparse_weights="auto", **base),
+                         obs=obs.labelled("sparse"))
+    if not sparse.n_sparse_leaves:
+        raise RuntimeError(f"{tag}: engine found no 2:4 leaves in the "
+                           f"pruned checkpoint — auto-detection broke")
+
+    dense.generate(reqs)                             # warm the jit caches
+    sparse.generate(reqs)
+    r_d, dense_s, dense_step_ms, _ = _timed_runs(dense, reqs)
+    r_s, sparse_s, sparse_step_ms, _ = _timed_runs(sparse, reqs)
+
+    for a, b in zip(r_d, r_s):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise RuntimeError(
+                f"{tag}: compressed weights changed greedy tokens for "
+                f"uid {a.uid}: {a.tokens.tolist()} vs {b.tokens.tolist()}")
+
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_sparse.json")
+    dense_b = _tree_bytes(pruned)
+    packed_b = _tree_bytes(compressed_param_tree(pruned))
+    frac = packed_b / dense_b
+    toks = sum(len(r.tokens) for r in r_s)
+    m = {"tok_s": toks / sparse_s,
+         "step_ms_p50": sparse_step_ms,
+         "step_ms_p50_dense": dense_step_ms,
+         "kv_pool_bytes_per_tok": _kv_bytes_per_tok(sparse),
+         "sparse_leaves": float(sparse.n_sparse_leaves),
+         "sparse_dispatch": float(sparse.stats["sparse_dispatch"]),
+         "weight_bytes_frac": frac,
+         "modeled_speedup": 1.0 / frac}
+    return [BenchResult(
+        f"serve_throughput/{tag}/sparse", sparse_s * 1e6,
+        f"tok_s={m['tok_s']:.1f} step_p50={sparse_step_ms:.2f}ms "
+        f"(dense {dense_step_ms:.2f}ms) leaves={sparse.n_sparse_leaves} "
+        f"weight_bytes={frac:.3f}x modeled={1.0 / frac:.2f}x", metrics=m)]
+
+
+def _bench_kv_int8(tag: str, model, params, n_requests: int
+                   ) -> List["BenchResult"]:
+    """int8 per-page KV quantization: same engine config with
+    ``kv_dtype="fp32"`` vs ``"int8"`` — the quantized pool must resolve
+    2× the pages at no more HBM (the ISSUE-9 capacity acceptance), and
+    the greedy streams must agree on at least ``KV_MATCH_MIN`` of
+    requests (quantization moves logits, so bit-parity is NOT expected —
+    tests/test_kernels.py holds the tight numeric bound; the tiny-config
+    exact gate lives there too)."""
+    from benchmarks.common import BenchResult
+    from repro.obs import Obs
+    from repro.serve import ServeConfig, ServeEngine
+
+    reqs = _workload(n_requests, model.cfg.vocab_size)
+    base = dict(max_batch=MAX_BATCH, max_len=MAX_LEN, page_size=PAGE_SIZE,
+                prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC)
+    obs = Obs.create(metrics=True, trace=True)
+    fp32 = ServeEngine(model, params, ServeConfig(kv_dtype="fp32", **base),
+                       obs=obs.labelled("kv_fp32"))
+    q8 = ServeEngine(model, params, ServeConfig(kv_dtype="int8", **base),
+                     obs=obs.labelled("kv_int8"))
+
+    pages_fp32 = fp32.config.resolved_num_pages()
+    pages_q8 = q8.config.resolved_num_pages()
+    if pages_q8 - 1 != 2 * (pages_fp32 - 1):        # page 0 is scrap
+        raise RuntimeError(
+            f"{tag}: int8 KV resolved {pages_q8} pages vs fp32 "
+            f"{pages_fp32} — expected 2x capacity at the same budget")
+    if q8.pool.pool_bytes() > fp32.pool.pool_bytes():
+        raise RuntimeError(
+            f"{tag}: int8 pool {q8.pool.pool_bytes()}B exceeds fp32 "
+            f"{fp32.pool.pool_bytes()}B at 2x the pages")
+
+    fp32.generate(reqs)                              # warm the jit caches
+    q8.generate(reqs)
+    r_f, _, _, _ = _timed_runs(fp32, reqs)
+    r_q, q8_s, q8_step_ms, _ = _timed_runs(q8, reqs)
+
+    match = float(np.mean([np.array_equal(a.tokens, b.tokens)
+                           for a, b in zip(r_f, r_q)]))
+    if match < KV_MATCH_MIN:
+        raise RuntimeError(
+            f"{tag}: int8-KV greedy streams match fp32 on only "
+            f"{match:.0%} of requests (floor {KV_MATCH_MIN:.0%})")
+
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_kv_int8.json")
+    toks = sum(len(r.tokens) for r in r_q)
+    m = {"tok_s": toks / q8_s,
+         "step_ms_p50": q8_step_ms,
+         "kv_pool_bytes_per_tok": _kv_bytes_per_tok(q8),
+         "kv_pool_bytes_per_tok_fp32": _kv_bytes_per_tok(fp32),
+         "num_pages": float(pages_q8),
+         "num_pages_fp32": float(pages_fp32),
+         "kv_quant_pages": float(q8.stats["kv_quant_pages"]),
+         "token_match_frac": match}
+    return [BenchResult(
+        f"serve_throughput/{tag}/kv_int8", q8_s * 1e6,
+        f"tok_s={m['tok_s']:.1f} pages={pages_q8} (fp32 {pages_fp32}) "
+        f"kv_B/tok={m['kv_pool_bytes_per_tok']:.0f} "
+        f"(fp32 {m['kv_pool_bytes_per_tok_fp32']:.0f}) "
+        f"match={match:.0%}", metrics=m)]
+
+
 def run(fast: bool = False) -> List["BenchResult"]:
     from benchmarks.common import trained_model
 
@@ -421,6 +581,8 @@ def run(fast: bool = False) -> List["BenchResult"]:
     results += _bench_streaming("lm", model, params, n_requests)
     results += _bench_prefix("lm", model, params, n_requests)
     results += _bench_obs_overhead("lm", model, params, n_requests)
+    results += _bench_sparse("lm", model, params, n_requests)
+    results += _bench_kv_int8("lm", model, params, n_requests)
     # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config
     # through mode="continuous", tokens identical to the dense cache)
     model, params, _ = trained_model("mamba")

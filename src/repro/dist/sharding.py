@@ -111,7 +111,20 @@ def param_specs(
 
     def spec_for(path, leaf):
         name = _path_str(path)
-        key = name.rsplit("/", 1)[-1]
+        parts = name.split("/")
+        key = parts[-1]
+        # 2:4-packed leaves (serve.sparse pack_24): .../wq/vals and
+        # .../wq/idx inherit the parent projection's rule — vals/idx
+        # share the dense leaf's shape except K halved, so the
+        # column-parallel N split carries over unchanged and the
+        # row-parallel contraction split applies to K/2 rows (the
+        # head-alignment guard below accounts for the halving)
+        packed = (key in ("vals", "idx") and len(parts) >= 2
+                  and (parts[-2] in _COL_PARALLEL
+                       or parts[-2] in _ROW_PARALLEL))
+        if packed:
+            parts = parts[:-1]
+            key = parts[-1]
         shape = tuple(leaf.shape)
         lead = 1 if name.startswith(_STACKED_PREFIXES) else 0
         base = shape[lead:]
@@ -144,10 +157,11 @@ def param_specs(
                 put(1, tp_axes, tp)
             put(0, fsdp, dp_size)
         elif len(base) == 2 and key in _ROW_PARALLEL:
-            parent = name.split("/")[-2] if "/" in name else ""
+            parent = parts[-2] if len(parts) >= 2 else ""
+            k_full = base[0] * (2 if packed else 1)
             whole_heads = (head_dim is None
                            or parent not in ("attn", "xattn")
-                           or (base[0] // tp) % head_dim == 0)
+                           or (k_full // tp) % head_dim == 0)
             if whole_heads:
                 put(0, tp_axes, tp)
             put(1, fsdp, dp_size)
@@ -303,6 +317,7 @@ def paged_kv_block_specs(
     *,
     extra_lead: int = 0,
     tp_axis: str = "model",
+    quantized: bool = False,
 ):
     """PartitionSpec dict for one paged KV-pool block (serve.kvpool).
 
@@ -325,7 +340,14 @@ def paged_kv_block_specs(
     else:
         sp = (None, None, None, None)
     spec = P(*lead, *sp)
-    return {"k": spec, "v": spec}
+    out = {"k": spec, "v": spec}
+    if quantized:
+        # int8 pools carry per-row f32 scale leaves (num_pages,
+        # page_size, KV) — same placement as their pages minus the hd dim
+        scale_spec = P(*lead, *sp[:3])
+        out["k_scale"] = scale_spec
+        out["v_scale"] = scale_spec
+    return out
 
 
 def paged_state_block_specs(

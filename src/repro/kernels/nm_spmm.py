@@ -15,6 +15,14 @@ all matmul dims are 128-aligned for the MXU.
 
 In-VMEM decompress is branch-free VPU code:
   dense[4g + r, n] = Σ_s vals[2g+s, n] · (idx[2g+s, n] == r)
+
+:func:`nm_spmm_decode` is the serve-time decode shape (ISSUE-9): M is
+the decode batch (a handful of rows, padded to the f32 sublane minimum
+of 8), so the whole M extent is ONE block and the grid drops to
+(N/bn, K/bk) with k innermost — plus a fused epilogue (bias add +
+activation) applied to the accumulator tile at the last k step, saving
+the extra HBM round-trip a separate bias/act op would cost on a
+memory-bound step.
 """
 
 from __future__ import annotations
@@ -25,6 +33,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import activate
+
+
+def _decompress_tile(vals, idx, bk: int) -> jax.Array:
+    """Branch-free in-VMEM 2:4 decompress of one (bk/2, bn) tile pair to
+    a dense (bk, bn) f32 tile (the shared body of both kernels)."""
+    g = bk // 4
+    bn = vals.shape[-1]
+    v = vals.reshape(g, 2, bn).astype(jnp.float32)
+    ix = idx.reshape(g, 2, bn).astype(jnp.int32)
+    r = jax.lax.broadcasted_iota(jnp.int32, (g, 2, 4, bn), 2)
+    hit = (ix[:, :, None, :] == r).astype(jnp.float32)
+    return jnp.sum(v[:, :, None, :] * hit, axis=1).reshape(bk, bn)
+
 
 def _nm_spmm_kernel(x_ref, vals_ref, idx_ref, o_ref, *, bk: int):
     k_step = pl.program_id(2)
@@ -33,18 +55,9 @@ def _nm_spmm_kernel(x_ref, vals_ref, idx_ref, o_ref, *, bk: int):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]                                # (bm, bk)
-    vals = vals_ref[...]                          # (bk//2, bn)
-    idx = idx_ref[...]                            # (bk//2, bn) int8
-    g = bk // 4
-    bn = vals.shape[-1]
-    v = vals.reshape(g, 2, bn).astype(jnp.float32)
-    ix = idx.reshape(g, 2, bn).astype(jnp.int32)
-    r = jax.lax.broadcasted_iota(jnp.int32, (g, 2, 4, bn), 2)
-    hit = (ix[:, :, None, :] == r).astype(jnp.float32)
-    dense = jnp.sum(v[:, :, None, :] * hit, axis=1).reshape(bk, bn)
+    dense = _decompress_tile(vals_ref[...], idx_ref[...], bk)
     o_ref[...] += jax.lax.dot(
-        x.astype(jnp.float32), dense,
+        x_ref[...].astype(jnp.float32), dense,
         preferred_element_type=jnp.float32)
 
 
@@ -87,3 +100,72 @@ def nm_spmm(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, vals, idx)
+
+
+def _nm_spmm_decode_kernel(x_ref, vals_ref, idx_ref, bias_ref, o_ref, *,
+                           bk: int, activation):
+    k_step = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dense = _decompress_tile(vals_ref[...], idx_ref[...], bk)
+    o_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), dense,
+        preferred_element_type=jnp.float32)
+
+    # fused epilogue: bias + activation on the resident accumulator tile
+    # at the last k step — no second pass over the (M, N) output in HBM
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        o_ref[...] = activate(o_ref[...] + bias_ref[...], activation)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bn", "bk", "activation", "interpret"),
+)
+def nm_spmm_decode(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    bias: jax.Array,
+    *,
+    bn: int = 128,
+    bk: int = 128,
+    activation=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shaped y = act(x @ decompress_24(vals, idx) + bias).
+
+    x: (M, K) with skinny M (the decode batch; callers pad M to ≥8 for
+    the f32 sublane tile) — the whole M extent is one block, so the grid
+    is (N/bn, K/bk) with k innermost.  bias: (1, N) (pass zeros for
+    none); ``activation``: None | "silu" | "gelu", applied in the
+    epilogue.  N and K must divide by the tile sizes (callers pad).
+    Returns (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = vals.shape
+    if k2 * 2 != k:
+        raise ValueError(f"vals rows {k2} != K/2 = {k // 2}")
+    if n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k},{n}) not divisible by "
+                         f"tiles ({bk},{bn})")
+    grid = (n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_nm_spmm_decode_kernel, bk=bk,
+                          activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda j, t: (0, t)),
+            pl.BlockSpec((bk // 2, bn), lambda j, t: (t, j)),
+            pl.BlockSpec((bk // 2, bn), lambda j, t: (t, j)),
+            pl.BlockSpec((1, bn), lambda j, t: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, t: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, vals, idx, bias)

@@ -36,6 +36,7 @@ from repro.kernels.paged_attn import paged_attn as _paged_attn
 from repro.kernels.hessian_accum import hessian_accum as _hessian
 from repro.kernels.nm_select import nm_select as _nm_select
 from repro.kernels.nm_spmm import nm_spmm as _nm_spmm
+from repro.kernels.nm_spmm import nm_spmm_decode as _nm_spmm_decode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,23 +97,60 @@ def compress_24(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array,
-              out_dtype=None, block: int = 128) -> jax.Array:
-    """y = x @ w_sparse for packed 2:4 weights; pads all dims to tiles.
+              bias: Optional[jax.Array] = None, *,
+              activation: Optional[str] = None,
+              out_dtype=None, block: int = 128,
+              use_kernel: Optional[bool] = None) -> jax.Array:
+    """y = act(x @ w_sparse + bias) for packed 2:4 weights.
 
-    x: (..., K); vals/idx: (K/2, N) → (..., N).
+    x: (..., K); vals/idx: (K/2, N) → (..., N).  ``bias`` ((N,) or
+    (1, N)) and ``activation`` (None | "silu" | "gelu") form the fused
+    decode epilogue.
+
+    Dispatch mirrors :func:`paged_attention`: the Pallas kernel on TPU
+    (or forced via ``JAX_PALLAS_INTERPRET=1`` / ``override_dispatch``);
+    the jnp decompress-oracle otherwise — this wrapper sits inside the
+    jitted serve decode burst, where interpret-mode execution would
+    dominate the step.  The oracle decompress is an exact inverse of
+    :func:`compress_24`, so f32 packed serving is bit-identical to the
+    dense path.  On the kernel side, skinny M (≤ ``block`` rows — every
+    decode burst) takes the single-M-block :func:`nm_spmm_decode`
+    variant with the epilogue fused into the accumulator tile; larger M
+    (prefill/calibration shapes) takes the tiled kernel with the
+    epilogue applied on the sliced result.
     """
+    mode = dispatch_mode()
+    if use_kernel is None:
+        use_kernel = mode.force_pallas or not mode.interpret
+    if not use_kernel:
+        y = ref.nm_spmm_ref(x, vals, idx, bias=bias, activation=activation)
+        return y.astype(out_dtype or x.dtype)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = vals.shape[-1]
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
-    bm = min(block, max(8, m))
-    x2p = _pad_to(x2, (bm, block))
     valsp = _pad_to(vals, (block // 2, block))
     idxp = _pad_to(idx, (block // 2, block))
+    if m <= block:
+        # decode shape: one M block (padded to the f32 sublane tile),
+        # bias + activation fused into the kernel epilogue
+        b2 = (jnp.zeros((1, n), jnp.float32) if bias is None
+              else jnp.reshape(bias, (1, n)).astype(jnp.float32))
+        mp = max(8, -(-m // 8) * 8)
+        y = _nm_spmm_decode(
+            _pad_to(x2, (mp, block)), valsp, idxp, _pad_to(b2, (1, block)),
+            bn=block, bk=block, activation=activation,
+            interpret=mode.interpret)
+        return y[:m, :n].reshape(*lead, n).astype(out_dtype or x.dtype)
+    bm = min(block, max(8, m))
+    x2p = _pad_to(x2, (bm, block))
     y = _nm_spmm(x2p, valsp, idxp, bm=bm, bn=block, bk=block,
-                 interpret=dispatch_mode().interpret)
-    y = y[:m, :n].reshape(*lead, n)
+                 interpret=mode.interpret)
+    y = y[:m, :n]
+    if bias is not None:
+        y = y + jnp.reshape(bias, (1, n)).astype(jnp.float32)
+    y = ref.activate(y, activation).reshape(*lead, n)
     return y.astype(out_dtype or x.dtype)
 
 
@@ -152,11 +190,15 @@ def nm_select_mask(w: jax.Array, hinv: jax.Array,
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_tables: jax.Array, lengths: jax.Array,
                     window: Optional[int] = None,
-                    use_kernel: Optional[bool] = None) -> jax.Array:
+                    use_kernel: Optional[bool] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Paged GQA decode attention over block-table pages.
 
     q: (B, KV, G, hd); k/v_pages: (P, page_size, KV, hd); block_tables:
-    (B, P_max) int32; lengths: (B,). Returns (B, KV, G, hd) in v.dtype.
+    (B, P_max) int32; lengths: (B,). Returns (B, KV, G, hd) in v.dtype
+    (f32 when ``k_scale``/``v_scale`` engage the int8 KV-page path —
+    pages dequantize row-wise at the gather, see serve/kvpool.py).
 
     Dispatch: the Pallas kernel on TPU (block-table scalar prefetch, no
     gather materialization); the jnp oracle otherwise — unlike the other
@@ -174,9 +216,13 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         use_kernel = mode.force_pallas or not mode.interpret
     if not use_kernel:
         return ref.paged_attn_ref(q, k_pages, v_pages, block_tables,
-                                  lengths, window=window)
+                                  lengths, window=window,
+                                  k_scale=k_scale, v_scale=v_scale)
     out = _paged_attn(q, k_pages, v_pages, block_tables, lengths,
-                      window=window, interpret=mode.interpret)
+                      window=window, interpret=mode.interpret,
+                      k_scale=k_scale, v_scale=v_scale)
+    if k_scale is not None:
+        return out                       # dequantized compute — f32 out
     return out.astype(v_pages.dtype)
 
 

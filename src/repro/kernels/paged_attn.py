@@ -31,9 +31,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                       acc_ref, m_ref, l_ref, *, page_size: int,
-                       window: Optional[int], scale: float):
+def _paged_attn_kernel(bt_ref, len_ref, q_ref, *refs, page_size: int,
+                       window: Optional[int], scale: float,
+                       quantized: bool = False):
+    if quantized:
+        # int8 KV pages ride with per-row f32 scales (serve/kvpool.py
+        # kv_dtype="int8"); dequant happens on the VMEM tile right
+        # after load — HBM still moves only the int8 bytes
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     b = pl.program_id(0)
     p = pl.program_id(2)
     n_pages = pl.num_programs(2)
@@ -58,6 +65,9 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)            # (ps, hd)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (G, ps)
@@ -93,22 +103,41 @@ def paged_attn(
     *,
     window: Optional[int] = None,
     interpret: bool = False,
+    k_scale: Optional[jax.Array] = None,   # (P, page_size, KV) f32
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """One paged GQA decode step. Returns (B, KV, G, hd) f32."""
+    """One paged GQA decode step. Returns (B, KV, G, hd) f32.
+
+    When ``k_scale``/``v_scale`` are given, k/v_pages are int8 and each
+    page tile is dequantized row-wise in VMEM (``int8 * scale``) — the
+    scale blocks ride the same block-table prefetch as their pages.
+    """
     b, kvh, g, hd = q.shape
     _, page_size, _, _ = k_pages.shape
     p_max = block_tables.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
+    page_spec = pl.BlockSpec((1, page_size, 1, hd),
+                             lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk, 0))
+    scale_spec = pl.BlockSpec((1, page_size, 1),
+                              lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bb, kk, pp, bt, ln: (bb, kk, 0, 0)),
+        page_spec,
+    ]
+    operands = [q, k_pages]
+    if quantized:
+        in_specs.append(scale_spec)
+        operands.append(k_scale)
+    in_specs.append(page_spec)
+    operands.append(v_pages)
+    if quantized:
+        in_specs.append(scale_spec)
+        operands.append(v_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kvh, p_max),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda bb, kk, pp, bt, ln: (bb, kk, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda bb, kk, pp, bt, ln: (bt[bb, pp], 0, kk, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda bb, kk, pp, bt, ln: (bb, kk, 0, 0)),
         scratch_shapes=[
@@ -119,9 +148,9 @@ def paged_attn(
     )
     return pl.pallas_call(
         functools.partial(_paged_attn_kernel, page_size=page_size,
-                          window=window, scale=scale),
+                          window=window, scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
+      *operands)

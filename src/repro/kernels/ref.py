@@ -59,10 +59,31 @@ def decompress_24(vals: jax.Array, idx: jax.Array) -> jax.Array:
     return dense.reshape(g * 4, n)
 
 
-def nm_spmm_ref(x: jax.Array, vals: jax.Array, idx: jax.Array) -> jax.Array:
-    """y = x @ decompress(vals, idx). x: (M, K); result (M, N) f32."""
+def activate(y: jax.Array, activation) -> jax.Array:
+    """The decode-epilogue activation: None | "silu" | "gelu".  Shared
+    by the fused nm_spmm_decode kernel and the jnp oracle so both sides
+    of the dispatch run the identical op sequence."""
+    if activation is None:
+        return y
+    if activation == "silu":
+        return jax.nn.silu(y)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    raise ValueError(f"unknown epilogue activation {activation!r}")
+
+
+def nm_spmm_ref(x: jax.Array, vals: jax.Array, idx: jax.Array,
+                bias=None, activation=None) -> jax.Array:
+    """y = act(x @ decompress(vals, idx) + bias). x: (..., K) → (..., N)
+    f32.  The decompress is an exact inverse of :func:`compress_24`, so
+    on f32 inputs this is bit-identical to the dense ``x @ w`` — the
+    property that lets the serve engine swap packed leaves in without
+    perturbing greedy token streams."""
     w = decompress_24(vals, idx)
-    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return activate(y, activation)
 
 
 # ----------------------------------------------------------------------
@@ -106,7 +127,7 @@ def nm_select_ref(w: jax.Array, hinv: jax.Array) -> jax.Array:
 # ----------------------------------------------------------------------
 def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                    block_tables: jax.Array, lengths: jax.Array,
-                   window=None) -> jax.Array:
+                   window=None, k_scale=None, v_scale=None) -> jax.Array:
     """Paged GQA decode oracle (and the CPU serving path — jittable).
 
     q: (B, KV, G, hd); k/v_pages: (P, page_size, KV, hd); block_tables:
@@ -116,6 +137,11 @@ def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     decode is bit-identical to the dense cache path.  Returns
     (B, KV, G, hd) in v.dtype (idle rows, length 0, are garbage — the
     caller masks them).
+
+    ``k_scale``/``v_scale`` (P, page_size, KV) f32 engage the int8
+    KV-page path (serve/kvpool.py ``kv_dtype="int8"``): pages are
+    dequantized row-wise right after the gather (``int8 * scale``) and
+    attention proceeds in f32 exactly as above — output dtype f32.
     """
     b, kvh, g, hd = q.shape
     _, page_size, _, _ = k_pages.shape
@@ -123,6 +149,11 @@ def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     s_len = p_max * page_size
     k = k_pages[block_tables].reshape(b, s_len, kvh, hd)
     v = v_pages[block_tables].reshape(b, s_len, kvh, hd)
+    if k_scale is not None:
+        ks = k_scale[block_tables].reshape(b, s_len, kvh)
+        vs = v_scale[block_tables].reshape(b, s_len, kvh)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     # the einsum strings (incl. the T=1 dim) mirror layers._sdpa exactly
     # — any other contraction layout lowers to a different f32 reduction
     # order and breaks decode bit-parity with the dense cache

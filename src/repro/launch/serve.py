@@ -101,6 +101,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "to the host tier and streams them back on "
                          "resume instead of recomputing (default: "
                          "pool-sized; 0 disables → recompute-only)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=("fp32", "int8"),
+                    help="KV page storage dtype: int8 quantizes pages "
+                         "on write with per-row scales (half the page "
+                         "bytes — the default pool sizing then holds "
+                         "2x the tokens; greedy streams match fp32 "
+                         "within a small tolerance, docs/serving.md)")
     # ---------------------------------------------- server front end
     ap.add_argument("--server", action="store_true",
                     help="run the streaming HTTP front end instead of "

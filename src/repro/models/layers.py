@@ -29,22 +29,29 @@ def _dense_init(key, d_in, d_out, dtype, scale=None):
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
 
 
-def linear(x, w, b=None, *, caps=None, name=""):
-    """y = x @ w (+ b), recording the input under ``name`` when capturing.
+def linear(x, w, b=None, *, caps=None, name="", activation=None):
+    """y = act(x @ w + b), recording the input under ``name`` when
+    capturing.
 
     ``w`` may be a 2:4-packed dict {"vals", "idx"} (serve.sparse) — then
-    the matmul dispatches to the nm_spmm Pallas kernel, which decompresses
-    in VMEM and runs a dense MXU matmul off half the weight HBM traffic.
+    the matmul dispatches through kernels.ops.nm_matmul: the jnp
+    decompress-oracle on CPU, the nm_spmm Pallas kernel on TPU (which
+    decompresses in VMEM and runs a dense MXU matmul off half the weight
+    HBM traffic); ``b``/``activation`` ride along as the kernel's fused
+    decode epilogue instead of separate HBM-round-trip ops.
     """
     if caps is not None and name:
         caps[name] = x
     if isinstance(w, dict):
         from repro.kernels import ops as _kops
-        y = _kops.nm_matmul(x, w["vals"], w["idx"], out_dtype=x.dtype)
-    else:
-        y = x @ w.astype(x.dtype)
+        return _kops.nm_matmul(x, w["vals"], w["idx"], b,
+                               activation=activation, out_dtype=x.dtype)
+    y = x @ w.astype(x.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)
+    if activation is not None:
+        from repro.kernels.ref import activate
+        y = activate(y, activation)
     return y
 
 
@@ -330,13 +337,53 @@ def _paged_write(pages: jax.Array, vals: jax.Array,
     return flat.reshape(p_, ps_, kvh, hd)
 
 
+def _paged_write_q8(pages: jax.Array, scales: jax.Array, vals: jax.Array,
+                    flat_idx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantizing twin of :func:`_paged_write` for int8 KV pages
+    (ServeConfig.kv_dtype="int8"): each written row quantizes per
+    (token, kv-head) — scale = amax(|row|)/127 over head_dim — and the
+    scale scatters into the pool's (P, page_size, KV) f32 scale leaf at
+    the same flat slot, so dequant at the gather needs no second
+    lookup structure."""
+    p_, ps_, kvh, hd = pages.shape
+    rows = vals.reshape(-1, kvh, hd).astype(jnp.float32)
+    s = jnp.max(jnp.abs(rows), axis=-1) / 127.0            # (R, KV)
+    q = jnp.round(rows / jnp.maximum(s, 1e-8)[..., None]).astype(jnp.int8)
+    flat = pages.reshape(p_ * ps_, kvh, hd)
+    flat = flat.at[flat_idx.reshape(-1)].set(q)
+    sflat = scales.reshape(p_ * ps_, kvh)
+    sflat = sflat.at[flat_idx.reshape(-1)].set(s)
+    return flat.reshape(p_, ps_, kvh, hd), sflat.reshape(p_, ps_, kvh)
+
+
+def _paged_scatter(cache: Params, k: jax.Array, v: jax.Array,
+                   flat: jax.Array) -> Params:
+    """Scatter K/V rows into the paged pool leaves, quantizing on write
+    when the cache carries scale leaves (int8 KV pages).  Returns the
+    dict of updated leaves."""
+    if "k_scale" not in cache:
+        return {"k": _paged_write(cache["k"], k, flat),
+                "v": _paged_write(cache["v"], v, flat)}
+    kq, ks = _paged_write_q8(cache["k"], cache["k_scale"], k, flat)
+    vq, vs = _paged_write_q8(cache["v"], cache["v_scale"], v, flat)
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+
 def attn_paged_cache_init(cfg: ArchConfig, num_pages: int, page_size: int,
                           dtype) -> Params:
+    """Paged pool leaves.  int8 adds per-row f32 scale leaves alongside
+    the quantized pages (quantize at the scatter, dequantize at the
+    gather); any other dtype keeps the two-leaf layout byte-identical
+    to the pre-ISSUE-9 tree."""
     kv, hd = cfg.num_kv_heads, cfg.hd
-    return {
+    cache = {
         "k": jnp.zeros((num_pages, page_size, kv, hd), dtype),
         "v": jnp.zeros((num_pages, page_size, kv, hd), dtype),
     }
+    if jnp.dtype(dtype) == jnp.int8:
+        cache["k_scale"] = jnp.zeros((num_pages, page_size, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((num_pages, page_size, kv), jnp.float32)
+    return cache
 
 
 def attn_apply(
@@ -411,11 +458,16 @@ def attn_apply(
             bt, tpos[None, :] // page_size, axis=1)          # (B, T)
         flat = page * page_size + tpos[None, :] % page_size
         flat = jnp.where(tpos[None, :] < lengths[:, None], flat, 0)
-        k_pages = _paged_write(cache["k"], k, flat)
-        v_pages = _paged_write(cache["v"], v, flat)
+        upd = _paged_scatter(cache, k, v, flat)
         s_len = bt.shape[1] * page_size
-        kc = k_pages[bt].reshape(b, s_len, kv, hd)
-        vc = v_pages[bt].reshape(b, s_len, kv, hd)
+        kc = upd["k"][bt].reshape(b, s_len, kv, hd)
+        vc = upd["v"][bt].reshape(b, s_len, kv, hd)
+        if "k_scale" in upd:
+            # int8 pages: dequantize the gathered slot context row-wise
+            kc = kc.astype(jnp.float32) * upd["k_scale"][bt].reshape(
+                b, s_len, kv)[..., None]
+            vc = vc.astype(jnp.float32) * upd["v_scale"][bt].reshape(
+                b, s_len, kv)[..., None]
         kpos = jnp.arange(s_len, dtype=jnp.int32)
         ok = kpos[None, None, :] <= positions[:, :, None]    # (B, T, S)
         if window is not None:
@@ -423,8 +475,7 @@ def attn_apply(
         out = _sdpa(q, kc, vc, ok[:, None, None], nh, kv)
         y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
         new_cache = dict(cache)
-        new_cache["k"] = k_pages
-        new_cache["v"] = v_pages
+        new_cache.update(upd)
         return h + y, new_cache
 
     if cache is None or t > 1:
@@ -463,8 +514,7 @@ def attn_apply(
             flat = page * page_size + tpos[None, :] % page_size
             flat = jnp.where(tpos[None, :] < lengths[:, None], flat, 0)
             new_cache = dict(cache)
-            new_cache["k"] = _paged_write(cache["k"], k, flat)
-            new_cache["v"] = _paged_write(cache["v"], v, flat)
+            new_cache.update(_paged_scatter(cache, k, v, flat))
             return h + y, new_cache
         # prefill: write the prompt's K/V into cache[0:t]
         new_cache = dict(cache)
@@ -488,17 +538,17 @@ def attn_apply(
             bt, (wpos // page_size)[:, None], axis=1)[:, 0]  # (B,)
         flat = page * page_size + wpos % page_size
         flat = jnp.where(pos >= 0, flat, 0)                  # idle → scrap
-        k_pages = _paged_write(cache["k"], k1[:, 0], flat)
-        v_pages = _paged_write(cache["v"], v1[:, 0], flat)
+        upd = _paged_scatter(cache, k1[:, 0], v1[:, 0], flat)
         lengths = jnp.maximum(pos + 1, 0)                    # idle → 0
         qg = q[:, 0].reshape(b, kv, nh // kv, hd)
-        out = _kops.paged_attention(qg, k_pages, v_pages, bt, lengths,
-                                    window=window)
+        out = _kops.paged_attention(qg, upd["k"], upd["v"], bt, lengths,
+                                    window=window,
+                                    k_scale=upd.get("k_scale"),
+                                    v_scale=upd.get("v_scale"))
         out = out.reshape(b, 1, nh * hd)
         y = linear(out, p["wo"], caps=caps, name=f"{prefix}wo")
         new_cache = dict(cache)
-        new_cache["k"] = k_pages
-        new_cache["v"] = v_pages
+        new_cache.update(upd)
         return h + y, new_cache
 
     positions = jnp.full((b, t), pos, dtype=jnp.int32)
@@ -550,15 +600,21 @@ def mlp_init(key, cfg: ArchConfig, dtype, d_ff=None) -> Params:
 
 def mlp_apply(p, h, cfg: ArchConfig, *, caps=None, prefix="mlp."):
     h_in = rmsnorm(p["ln"], h, cfg.norm_eps)
-    up = linear(h_in, p["wi"], caps=caps, name=f"{prefix}wi")
+    # glu gates fuse their activation into the projection epilogue (a
+    # no-op for dense weights, a true in-kernel epilogue for 2:4-packed
+    # ones); jax.nn.gelu's default approximate=True matches the fused
+    # "gelu" epilogue in kernels.ref.activate
     if cfg.mlp_kind == "swiglu":
-        gate = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg")
-        act = jax.nn.silu(gate) * up
+        up = linear(h_in, p["wi"], caps=caps, name=f"{prefix}wi")
+        act = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg",
+                     activation="silu") * up
     elif cfg.mlp_kind == "geglu":
-        gate = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg")
-        act = jax.nn.gelu(gate, approximate=True) * up
+        up = linear(h_in, p["wi"], caps=caps, name=f"{prefix}wi")
+        act = linear(h_in, p["wg"], caps=caps, name=f"{prefix}wg",
+                     activation="gelu") * up
     else:
-        act = jax.nn.gelu(up, approximate=True)
+        act = linear(h_in, p["wi"], caps=caps, name=f"{prefix}wi",
+                     activation="gelu")
     y = linear(act, p["wo"], caps=caps, name=f"{prefix}wo")
     return h + y
 

@@ -410,6 +410,10 @@ class LM:
         (serve.kvpool.StatePool resets rows at admission)."""
         cfg = self.cfg
         dt = dtype or self.dtype
+        # int8 quantization applies to attention pages only (they carry
+        # per-row scale leaves, see layers.attn_paged_cache_init);
+        # recurrent-state slot pools stay at the model dtype
+        state_dt = self.dtype if jnp.dtype(dt) == jnp.int8 else dt
         kinds = (*cfg.prefix, *cfg.period)
         bad = [k for k in kinds
                if k not in ("attn", "attn_local", *self.STATE_KINDS)]
@@ -428,7 +432,7 @@ class LM:
         def block_paged_init(kind):
             if kind in ("attn", "attn_local"):
                 return attn_paged_cache_init(cfg, num_pages, page_size, dt)
-            return block_cache_init(cfg, kind, max_slots, 0, dt)
+            return block_cache_init(cfg, kind, max_slots, 0, state_dt)
 
         cache: Params = {}
         if cfg.prefix:
@@ -488,7 +492,8 @@ class LM:
                 tp_axis=tp_axis, seq_shard=seq_shard,
                 prefer_seq=prefer_seq))
 
-    def paged_cache_specs(self, mesh, tp_axis: str = "model"):
+    def paged_cache_specs(self, mesh, tp_axis: str = "model",
+                          quantized: bool = False):
         """PartitionSpec pytree for the paged serve cache
         (:meth:`init_paged_cache`): attention pages replicated over the
         data axes, KV heads over the model axis when they divide it —
@@ -508,7 +513,8 @@ class LM:
                 return paged_state_block_specs(
                     kind, dims, mesh, extra_lead=lead, tp_axis=tp_axis)
             return paged_kv_block_specs(
-                dims, mesh, extra_lead=lead, tp_axis=tp_axis)
+                dims, mesh, extra_lead=lead, tp_axis=tp_axis,
+                quantized=quantized)
 
         return self._assemble_cache_specs(block_specs)
 

@@ -58,6 +58,18 @@ class ServeConfig:
     # prefix caching + tiered KV (ISSUE-7 tentpole)
     prefix_cache: bool = True
     host_swap_pages: Optional[int] = None   # None → pool-sized; 0 → off
+    # KV page dtype (ISSUE-9): "int8" stores pages quantized with
+    # per-row f32 scales (quantize at attn_apply's paged scatter,
+    # dequantize at the paged_attn gather) — ~half the page bytes, so
+    # the default pool sizing doubles the page count at the same HBM
+    # budget (resolved_num_pages)
+    kv_dtype: str = "fp32"
+    # compressed-weight serving (ISSUE-9): "auto" detects 2:4 leaves at
+    # engine load and keeps only (vals, idx) in HBM (serve.sparse
+    # .compressed_param_tree — f32 token streams are bit-identical);
+    # "off" serves whatever tree it was handed unmodified (the
+    # benchmark's dense-on-pruned comparison leg)
+    sparse_weights: str = "auto"
     # front end (launch/serve.py, frontend.Replica/Router)
     replicas: int = 1
     queue_depth: Optional[int] = None   # wait-queue cap → HTTP 429
@@ -94,6 +106,13 @@ class ServeConfig:
             raise ValueError("top_p must be in (0, 1]")
         if self.host_swap_pages is not None and self.host_swap_pages < 0:
             raise ValueError("host_swap_pages must be >= 0 (0 = off)")
+        if self.kv_dtype not in ("fp32", "int8"):
+            raise ValueError(f"unknown kv_dtype {self.kv_dtype!r} "
+                             "(expected 'fp32' or 'int8')")
+        if self.sparse_weights not in ("auto", "off"):
+            raise ValueError(f"unknown sparse_weights "
+                             f"{self.sparse_weights!r} "
+                             "(expected 'auto' or 'off')")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
         if self.queue_depth is not None and self.queue_depth < 1:
@@ -102,10 +121,15 @@ class ServeConfig:
 
     def resolved_num_pages(self) -> int:
         """The pool size: explicit, or the dense static cache's token
-        capacity + the scrap page."""
+        capacity + the scrap page.  int8 KV pages cost half the bytes
+        of fp32 (int8 payload + a per-row f32 scale, amortized over
+        head_dim), so the default sizing doubles the per-slot page
+        count — the same HBM budget holds 2× the tokens."""
         if self.num_pages is not None:
             return self.num_pages
         per_slot = -(-self.max_len // self.page_size)
+        if self.kv_dtype == "int8":
+            per_slot *= 2
         return self.max_batch * per_slot + 1
 
     def resolved_swap_pages(self) -> int:
@@ -143,6 +167,7 @@ class ServeConfig:
             steps_per_sync=args.steps_per_sync,
             prefix_cache=args.prefix_cache,
             host_swap_pages=args.host_swap_pages,
+            kv_dtype=getattr(args, "kv_dtype", "fp32"),
             replicas=args.replicas,
             queue_depth=args.queue_depth,
             metrics=getattr(args, "metrics", True),

@@ -159,6 +159,16 @@ class ServeEngine:
             for a in self.dp_axes:
                 self._dp *= mesh.shape[a]
             self._batch_sharding = batch_sharding(mesh, self.dp_axes)
+        # compressed-weight serving (ISSUE-9): detect 2:4-prunable
+        # leaves ONCE at load and keep only (vals, idx) in HBM — dense
+        # leaves that verify as 2:4 pack here, pre-packed checkpoints
+        # pass through, everything else is untouched.  The decompress
+        # is an exact inverse, so f32 token streams are unchanged.
+        from repro.serve.sparse import compressed_param_tree, count_packed
+
+        if config.sparse_weights == "auto":
+            params = compressed_param_tree(params)
+        self.n_sparse_leaves = count_packed(params)
         # resident serving: tensor-parallel only (fsdp_axes=()) — an FSDP
         # all-gather per decode step would dominate the wire.  head_dim
         # keeps whole heads per model shard (rope-safe, see param_specs)
@@ -219,6 +229,7 @@ class ServeEngine:
             self.pool = PagedKVPool(
                 model, num_pages=config.resolved_num_pages(),
                 page_size=page_size, max_slots=max_batch, max_len=max_len,
+                dtype=jnp.int8 if config.kv_dtype == "int8" else None,
                 mesh=mesh, prefix_cache=config.prefix_cache,
                 host_swap_pages=config.resolved_swap_pages(),
                 obs=self.obs)
@@ -603,6 +614,10 @@ class ContinuousSession:
         eng.m.decode_wall.inc(t1 - t0)
         eng.m.host_syncs.inc()
         eng.m.device_steps.inc(steps_run)
+        if eng.n_sparse_leaves:
+            # every dispatch of this interval routed its packed QKV/MLP
+            # projections through the compressed nm_spmm path
+            eng.m.sparse_dispatch.inc()
         eng.m.burst_steps.observe(steps_run)
         eng.obs.tracer.complete(
             "prefill_burst" if pseq is not None else "decode_burst",

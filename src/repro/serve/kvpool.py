@@ -144,13 +144,21 @@ class PagedKVPool:
         # pages and decode never extends a block table
         self.has_kv_pages = any(
             k in ("attn", "attn_local") for k in (*cfg.prefix, *cfg.period))
+        # int8 KV pages (ServeConfig.kv_dtype="int8"): quantized pages +
+        # per-row f32 scale leaves in the same pool tree — every data
+        # plane below (CoW copy, host-arena gather/scatter) iterates
+        # block.items() generically, so scales ride along untouched
+        self.quantized = (self.has_kv_pages and dtype is not None
+                          and jnp.dtype(dtype) == jnp.int8)
         self.kv = model.init_paged_cache(num_pages, page_size, dtype,
                                          max_slots=max_slots)
         if mesh is not None:
             from repro.dist import named_shardings
 
             self.kv = jax.device_put(
-                self.kv, named_shardings(mesh, model.paged_cache_specs(mesh)))
+                self.kv, named_shardings(
+                    mesh, model.paged_cache_specs(
+                        mesh, quantized=self.quantized)))
         self.block_tables = np.zeros(
             (max_slots, self.pages_per_slot), np.int32)
         self._n_pages = np.zeros((max_slots,), np.int32)
@@ -192,6 +200,16 @@ class PagedKVPool:
         cur = self.m.snapshot()
         return {k: cur[k] - self._stats_base.get(k, 0) for k in POOL_KEYS}
 
+    def pool_bytes(self) -> int:
+        """HBM bytes of the attention page pool — quantized pools count
+        the int8 pages plus their f32 scale leaves (the honest cost).
+        The numerator of the benchmark's ``kv_pool_bytes_per_tok``."""
+        total = 0
+        for path, _ in self._attn_paths:
+            block = _tree_get(self.kv, path)
+            total += sum(v.size * v.dtype.itemsize for v in block.values())
+        return int(total)
+
     def pages_for(self, n_tokens: int) -> int:
         """Pages backing ``n_tokens`` KV entries — 0 for pure
         recurrent-state archs (no attention layers, nothing to page)."""
@@ -214,6 +232,8 @@ class PagedKVPool:
         out = self._free[-n:][::-1]
         del self._free[-n:]
         self._ref[out] = 1
+        if self.quantized:
+            self.m.kv_quant_pages.inc(n)
         return out
 
     def retain(self, page: int) -> None:

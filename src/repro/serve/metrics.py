@@ -106,6 +106,14 @@ class ServeMetrics:
         self.swap_in_wall = c(
             "serve_swap_in_seconds_total",
             "Wall time inside swap-in restores")
+        # ---- compressed weights / quantized KV (ISSUE-9) ---------------
+        self.sparse_dispatch = c(
+            "sparse_dispatch_total",
+            "Burst dispatches routed through the compressed 2:4 "
+            "weight path (packed QKV/MLP projections)")
+        self.kv_quant_pages = c(
+            "kv_quant_pages_total",
+            "int8 KV pages allocated (quantize-on-write pools only)")
         # ---- latency histograms ---------------------------------------
         self.ttft = h(
             "serve_ttft_seconds",
@@ -143,6 +151,8 @@ class ServeMetrics:
             "swap_out_pages": self.swap_out_pages,
             "swap_in_pages": self.swap_in_pages,
             "swap_in_wall_s": self.swap_in_wall,
+            "sparse_dispatch": self.sparse_dispatch,
+            "kv_quant_pages": self.kv_quant_pages,
         }
 
     @property

@@ -68,11 +68,71 @@ def sparsify_params(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
         match = any(r.search(path) for r in regs)
         if match and (not verify or _is_24_sparse(leaf)):
-            if leaf.ndim == 3:
-                vals, idx = jax.vmap(kops.compress_24)(jnp.asarray(leaf))
-            else:
-                vals, idx = kops.compress_24(leaf)
-            leaves.append({"vals": vals, "idx": idx})
+            leaves.append(pack_24(leaf))
         else:
             leaves.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def pack_24(leaf: jax.Array) -> dict:
+    """One dense 2:4 leaf (K, N) or layer-stacked (L, K, N) → the packed
+    {"vals", "idx"} dict models.layers.linear dispatches on."""
+    if leaf.ndim == 3:
+        vals, idx = jax.vmap(kops.compress_24)(jnp.asarray(leaf))
+    else:
+        vals, idx = kops.compress_24(leaf)
+    return {"vals": vals, "idx": idx}
+
+
+def is_packed(leaf) -> bool:
+    """True for a pack_24 output (the dict layout linear dispatches on)."""
+    return isinstance(leaf, dict) and set(leaf) == {"vals", "idx"}
+
+
+def count_packed(params: Any) -> int:
+    """Number of packed {"vals","idx"} leaves in a param tree (the
+    engine's load-time sparse-detection summary + the obs gauge)."""
+    n = 0
+
+    def visit(node):
+        nonlocal n
+        if is_packed(node):
+            n += 1
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                visit(v)
+
+    visit(params)
+    return n
+
+
+def compressed_param_tree(
+    params: Any,
+    patterns: Sequence[str] = DEFAULT_SPARSE_PATTERNS,
+) -> Any:
+    """The serve-engine load hook: detect 2:4 leaves ONCE and return the
+    tree with every such leaf packed, so HBM holds only (vals, idx).
+
+    Idempotent — already-packed {"vals","idx"} dicts pass through
+    untouched (a checkpoint pre-packed by :func:`sparsify_params`, or a
+    re-entrant call), dense leaves that match ``patterns`` AND verify as
+    2:4 get packed, and everything else (biases, norms, embeddings,
+    non-2:4 matmuls of an unpruned model) is returned as-is.  The
+    decompress in kernels.ref is an exact inverse of the pack, so f32
+    token streams are bit-identical either way."""
+    regs = [re.compile(p) for p in patterns]
+
+    # walk dict nodes by hand: packed leaves are themselves dicts, so a
+    # tree_map would descend into them and re-pack the vals
+    def walk(node, path):
+        if is_packed(node):
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}" if path else str(k))
+                    for k, v in node.items()}
+        if any(r.search(path) for r in regs) and _is_24_sparse(node):
+            return pack_24(node)
+        return node
+
+    return walk(params, "")
