@@ -64,6 +64,17 @@ Chrome-trace JSON as ``BENCH_TRACE_serve_*.json`` — matched by the CI
 bench-gate job's ``BENCH_*.json`` artifact upload, ignored by the
 gate diff itself.
 
+A ``chaos`` leg (ISSUE-10) drives the mixed workload through a
+two-replica router while a :class:`FaultPlan` kills r0's worker on its
+third burst dispatch and a supervisor recovers it (restart + in-flight
+failover with replay suppression).  Every stream must be bit-exact
+against an uninjected batch run — the acceptance bound — and the leg
+reports **recovery_ms** (supervisor's crash-detection → restart +
+all-failed-over window, median over repeated injected crashes, from the
+``serve_recovery_seconds`` histogram) and tok/s under the injected
+crash; ``recovery_ms`` is CI-gated on rises like the other
+lower-is-better latencies.
+
 All legs build their engines from one :class:`repro.serve.ServeConfig`
 literal — the same object ``launch/serve.py`` constructs from flags.
 
@@ -411,6 +422,134 @@ def _bench_obs_overhead(tag: str, model, params, n_requests: int
         f"(bound {OBS_OVERHEAD_MAX:.0%})", metrics=m)]
 
 
+# --------------------------------------------------- chaos leg (ISSUE-10)
+CHAOS_RUNS = 5                 # injected crashes; medians absorb jitter
+INERT_AFTER = 1 << 30          # constructor plan that can never fire
+
+
+def _recovery_totals(registry):
+    """(count, sum_seconds) across every serve_recovery_seconds child."""
+    fam = registry.get("serve_recovery_seconds")
+    if fam is None:
+        return 0, 0.0
+    n = s = 0
+    for _, child in fam.children():
+        n += child.count
+        s += child.mean * child.count
+    return n, s
+
+
+def _bench_chaos(tag: str, model, params, n_requests: int
+                 ) -> List["BenchResult"]:
+    """ISSUE-10 acceptance: the mixed workload through a two-replica
+    router while an injected ``engine_step`` raise kills r0's worker on
+    its third burst and the supervisor recovers it.  Token streams —
+    including the failed-over ones, replay-suppressed — must be
+    bit-exact against the uninjected batch run; reports the median
+    supervisor recovery window and tok/s paid under the crash.
+
+    The fault hook reads ``engine.faults`` per burst, so one warmed
+    engine pair serves every run: r0 is built with an inert plan (the
+    hook exists but never fires) and each measured run re-arms a fresh
+    3rd-burst crash before rebuilding the replicas."""
+    import threading
+
+    from benchmarks.common import BenchResult
+    from repro.obs import Obs
+    from repro.serve import FaultPlan, FaultSpec, ServeConfig, ServeEngine
+    from repro.serve.frontend import Replica, Router, Supervisor
+
+    reqs = _workload(n_requests, model.cfg.vocab_size)
+    base = dict(max_batch=MAX_BATCH, max_len=MAX_LEN, page_size=PAGE_SIZE,
+                prefill_chunk=PREFILL_CHUNK, steps_per_sync=STEPS_PER_SYNC)
+    obs = Obs.create(metrics=True, trace=True)
+    inert = FaultPlan([FaultSpec("engine_step", after=INERT_AFTER)])
+    eng0 = ServeEngine(model, params, ServeConfig(faults=inert, **base),
+                       obs=obs.labelled("r0"))
+    eng1 = ServeEngine(model, params, ServeConfig(**base),
+                       obs=obs.labelled("r1"))
+
+    # the token oracle AND the jit warmup — bit-exactness is against
+    # this uninjected batch run (per-(uid, step) key contract)
+    ref = {r.uid: list(x.tokens)
+           for r, x in zip(reqs, eng1.generate(reqs, seed=0))}
+    eng0.generate(reqs, seed=0)
+
+    walls, recoveries = [], []
+    restarts = failed_over = 0
+    for _ in range(CHAOS_RUNS):
+        plan = FaultPlan([FaultSpec("engine_step", after=2)])
+        eng0.faults = plan                       # re-arm: hook reads live
+        r0 = Replica(eng0, name="r0", seed=0)
+        r1 = Replica(eng1, name="r1", seed=0)
+        router = Router([r0, r1])
+        sup = Supervisor(router, failover_retries=8)
+        lock = threading.Lock()
+        toks, done = {}, {}
+
+        def make_cb(uid, toks=toks, done=done, lock=lock):
+            def cb(ev):
+                with lock:
+                    toks.setdefault(uid, []).extend(ev.tokens)
+                    if ev.finished:
+                        done[uid] = ev
+            return cb
+
+        rec0 = _recovery_totals(obs.metrics)
+        t0 = time.monotonic()
+        try:
+            for r in reqs:
+                router.submit_request(r, make_cb(r.uid))
+            while len(done) < len(reqs):
+                if time.monotonic() - t0 > 120:
+                    raise RuntimeError(
+                        f"{tag}: chaos run stuck — done={sorted(done)} "
+                        f"crashed={r0.crashed!r}")
+                sup.check_once()
+                time.sleep(0.005)
+            walls.append(time.monotonic() - t0)
+            recovered = r0.crashed is None and r0.healthy
+        finally:
+            sup.stop()
+            router.close()
+
+        if plan.fired.get("engine_step", 0) < 1:
+            raise RuntimeError(f"{tag}: injected crash never fired")
+        if not recovered:
+            raise RuntimeError(f"{tag}: r0 not recovered after the run")
+        with lock:
+            for uid, want in ref.items():
+                if toks[uid] != want:
+                    raise RuntimeError(
+                        f"{tag}: uid {uid} stream changed under chaos: "
+                        f"{toks[uid]} vs {want}")
+                if done[uid].finish_reason not in ("stop", "length"):
+                    raise RuntimeError(
+                        f"{tag}: uid {uid} finished "
+                        f"{done[uid].finish_reason!r} under chaos")
+        n, s = _recovery_totals(obs.metrics)
+        if n - rec0[0] < 1:
+            raise RuntimeError(f"{tag}: serve_recovery_seconds never "
+                               f"ticked — supervisor path unexercised")
+        recoveries.append((s - rec0[1]) / (n - rec0[0]))
+        snap = eng0.m.snapshot()
+        restarts = int(snap["replica_restarts"])
+        failed_over = int(snap["failed_over"])
+
+    obs.tracer.export(f"BENCH_TRACE_serve_{tag}_chaos.json")
+    wall = statistics.median(walls)
+    toks_total = sum(len(t) for t in ref.values())
+    m = {"tok_s": toks_total / wall,
+         "recovery_ms": statistics.median(recoveries) * 1e3,
+         "replica_restarts": float(restarts),
+         "failed_over": float(failed_over)}
+    return [BenchResult(
+        f"serve_throughput/{tag}/chaos", wall * 1e6,
+        f"tok_s={m['tok_s']:.1f} recovery={m['recovery_ms']:.1f}ms "
+        f"restarts={restarts} failed_over={failed_over} "
+        f"(streams bit-exact x{CHAOS_RUNS})", metrics=m)]
+
+
 # ------------------------------------------- sparse / int8-KV legs (ISSUE-9)
 KV_MATCH_MIN = 0.60            # int8-KV greedy agreement floor (see docs)
 
@@ -581,6 +720,7 @@ def run(fast: bool = False) -> List["BenchResult"]:
     results += _bench_streaming("lm", model, params, n_requests)
     results += _bench_prefix("lm", model, params, n_requests)
     results += _bench_obs_overhead("lm", model, params, n_requests)
+    results += _bench_chaos("lm", model, params, n_requests)
     results += _bench_sparse("lm", model, params, n_requests)
     results += _bench_kv_int8("lm", model, params, n_requests)
     # the recurrent-state pool path (ISSUE-4 acceptance: a Mamba config

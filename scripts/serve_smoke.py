@@ -20,12 +20,22 @@ subprocess-orchestration flakiness): server on the asyncio loop,
 replicas on their worker threads — the same topology the CLI boots.
 
   PYTHONPATH=src python scripts/serve_smoke.py
+
+``--chaos`` (ISSUE-10) runs the fault-tolerance smoke instead: a
+FaultPlan kills replica r0's worker mid-stream (injected engine_step
+raise on its third burst) while a supervisor polls, and one streaming
+client hangs up mid-response.  Asserts every surviving stream —
+including the failed-over ones — is bit-exact against an uninjected
+batch run, the disconnect frees its request, and the /metrics recovery
+counters (replica_restarts_total, requests_failed_over_total,
+requests_cancelled_total, serve_recovery_seconds) actually ticked.
 """
 
 import asyncio
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -35,17 +45,18 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.models import LM
 from repro.obs import Obs
-from repro.serve import Request, ServeEngine
-from repro.serve.frontend import Replica, Router, Server, sse_decode
+from repro.serve import FaultPlan, FaultSpec, Request, ServeEngine
+from repro.serve.frontend import (Replica, Router, Server, Supervisor,
+                                  sse_decode)
 
 STEPS_PER_SYNC = 2        # several sync intervals per request →
 #                           several SSE frames: the incrementality check
 
 
-def engine(model, params, obs=None):
+def engine(model, params, obs=None, **kw):
     return ServeEngine(model, params, max_batch=4, max_len=64,
                        page_size=8, prefill_chunk=8,
-                       steps_per_sync=STEPS_PER_SYNC, obs=obs)
+                       steps_per_sync=STEPS_PER_SYNC, obs=obs, **kw)
 
 
 async def post(host, port, obj):
@@ -174,5 +185,99 @@ async def main() -> None:
           "on 2 replicas")
 
 
+async def chaos() -> None:
+    """Fault-tolerance smoke (ISSUE-10): mid-stream replica crash with
+    supervised failover + a mid-stream client disconnect."""
+    cfg = get_smoke("paper_tiny_lm")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    params["unembed"]["head"] = params["unembed"]["head"] * 8.0
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=(5, 9)[i % 2],
+                                        dtype=np.int32),
+                    max_new_tokens=(10, 13)[i % 2])
+            for i in range(6)]
+    ref = {r.uid: list(x.tokens) for r, x in
+           zip(reqs, engine(model, params).generate(reqs, seed=0))}
+
+    # ONE plan shared by both replicas, scoped to r0 (the burst hook
+    # passes the engine's obs label): r0's third burst dispatch raises
+    plan = FaultPlan([FaultSpec("engine_step", after=2, replica="r0")])
+    obs = Obs.create(metrics=True, trace=False)
+    router = Router([Replica(engine(model, params, obs.labelled(f"r{i}"),
+                                    faults=plan),
+                             name=f"r{i}", seed=0)
+                     for i in range(2)])
+    sup = Supervisor(router, poll_s=0.05, failover_retries=8)
+    sup.start()
+    srv = Server(router, port=0)
+    host, port = await srv.start()
+    print(f"chaos server up on {host}:{port}; plan: engine_step "
+          f"after=2 on r0")
+
+    # one extra streaming client that will hang up mid-response
+    async def disconnecting_client():
+        body = json.dumps({"prompt": [3, 1, 4, 1, 5], "max_tokens": 40,
+                           "uid": 50, "stream": True}).encode()
+        r, w = await asyncio.open_connection(host, port)
+        w.write(f"POST /v1/completions HTTP/1.1\r\nHost: s\r\n"
+                f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await w.drain()
+        await r.readuntil(b"\n\n")     # headers/first frame flowing...
+        w.close()                      # ...then vanish
+
+    outs, _ = await asyncio.gather(
+        asyncio.gather(*[
+            post(host, port, {"prompt": [int(t) for t in r.prompt],
+                              "max_tokens": r.max_new_tokens, "uid": r.uid,
+                              "stream": True})
+            for r in reqs]),
+        disconnecting_client())
+
+    assert plan.fired.get("engine_step", 0) >= 1, \
+        "chaos plan never fired — the crash was not exercised"
+    for r, (status, rest) in zip(reqs, outs):
+        assert status == 200, (r.uid, status)
+        chunks = sse_decode(rest)
+        assert chunks[-1].finished
+        assert chunks[-1].finish_reason in ("stop", "length"), \
+            f"uid {r.uid} did not finish cleanly: {chunks[-1].finish_reason}"
+        toks = [t for c in chunks for t in c.tokens]
+        assert toks == ref[r.uid], \
+            f"uid {r.uid}: stream changed under chaos: {toks} != {ref[r.uid]}"
+    print(f"all {len(reqs)} streams bit-exact vs uninjected run "
+          f"(fault fired {plan.fired['engine_step']}x)")
+
+    # the disconnect cancels asynchronously — wait for the counter
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        _, body = await get(host, port, "/metrics")
+        _, n_cancel = series_sum(body.decode(), "requests_cancelled_total")
+        if n_cancel >= 1:
+            break
+        await asyncio.sleep(0.05)
+
+    status, body = await get(host, port, "/metrics")
+    assert status == 200
+    text = body.decode()
+    for name in ("replica_restarts_total", "requests_failed_over_total",
+                 "requests_cancelled_total", "serve_recovery_seconds_count"):
+        present, tot = series_sum(text, name)
+        assert present, f"/metrics is missing {name}"
+        assert tot >= 1, f"{name} did not tick under chaos ({tot})"
+        print(f"  {name} = {tot:.0f}")
+    present, healthy = series_sum(text, "serve_replica_healthy")
+    assert present and healthy == 2.0, \
+        f"replicas not healthy after recovery: {healthy}"
+
+    sup.stop()
+    await srv.shutdown(timeout=30)
+    router.close()
+    print("chaos smoke OK: crash recovered, streams bit-exact, "
+          "disconnect cancelled, recovery counters ticked")
+
+
 if __name__ == "__main__":
-    asyncio.run(main())
+    asyncio.run(chaos() if "--chaos" in sys.argv else main())

@@ -4,13 +4,16 @@
       --ckpt /tmp/repro_train --sparsity 2:4 --method SM --out /tmp/pruned
 
 Resumable: progress is checkpointed per segment (kill + rerun continues
-at the interrupted transformer block).
+at the interrupted transformer block).  SIGTERM lands on the same path
+as Ctrl-C: the current segment's checkpointed progress survives and the
+stage trace (``--trace-out``) is exported on the way out.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +49,21 @@ def eval_ppl(model: LM, params, pipe: DataPipeline, n: int = 8) -> float:
     return float(np.exp(tot / cnt))
 
 
+def install_sigterm_handler() -> None:
+    """Orchestrator SIGTERM → KeyboardInterrupt: the per-segment
+    progress store has already checkpointed everything solved so far
+    (rerun resumes), and the ``finally`` below still exports the stage
+    trace instead of losing it (ISSUE-10 satellite)."""
+
+    def _raise(signum, frame):
+        raise KeyboardInterrupt
+
+    try:
+        signal.signal(signal.SIGTERM, _raise)
+    except ValueError:
+        pass   # not the main thread
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper_tiny_lm")
@@ -78,9 +96,22 @@ def main() -> None:
                          "capture/solve/propagate stage spans here")
     add_mesh_argument(ap)
     args = ap.parse_args()
+    install_sigterm_handler()
 
     cfg = (cfglib.get_smoke(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
+    # created up front so an interrupted run (Ctrl-C / SIGTERM) still
+    # exports whatever stage spans it recorded before dying
+    obs = Obs.create(metrics=args.metrics, trace=args.trace_out is not None)
+    try:
+        _run(args, cfg, obs)
+    finally:
+        if args.trace_out:
+            n = obs.tracer.export(args.trace_out)
+            print(f"wrote {n} trace events -> {args.trace_out}")
+
+
+def _run(args, cfg, obs: Obs) -> None:
     with mesh_context(args.mesh):
         model = LM(cfg)
         params = load_trained_params(model, args.ckpt)
@@ -98,8 +129,6 @@ def main() -> None:
             pipeline=args.pipeline, calib_shard=args.calib_shard)
         # stage timing + spans flow through the same registry/tracer
         # the serve stack uses (core.pipeline reads engine.obs)
-        obs = Obs.create(metrics=args.metrics,
-                         trace=args.trace_out is not None)
         engine.obs = obs
         pruned, reports = engine.run(params, calib)
         s = summarize(reports)
@@ -116,9 +145,6 @@ def main() -> None:
     save_pytree(os.path.join(args.out, "pruned_params"), pruned,
                 extra={"method": args.method, "sparsity": args.sparsity})
     print(f"saved to {args.out}/pruned_params")
-    if args.trace_out:
-        n = obs.tracer.export(args.trace_out)
-        print(f"wrote {n} trace events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import signal
 import time
 
 import jax
@@ -41,8 +42,23 @@ from repro.models import LM
 from repro.obs import Obs
 from repro.serve import ServeConfig, ServeEngine, sparsify_params
 from repro.serve.frontend import (CompletionRequest, CompletionResponse,
-                                  Replica, Router, run_server,
+                                  Replica, Router, Supervisor, run_server,
                                   to_engine_request)
+
+
+def install_sigterm_handler() -> None:
+    """Route SIGTERM (the orchestrator's stop signal) through the SAME
+    KeyboardInterrupt path as Ctrl-C: drain-first shutdown, then the
+    ``finally`` trace export — instead of dying mid-step with KV state
+    on the floor (ISSUE-10 satellite)."""
+
+    def _raise(signum, frame):
+        raise KeyboardInterrupt
+
+    try:
+        signal.signal(signal.SIGTERM, _raise)
+    except ValueError:
+        pass   # not the main thread (tests import and call main())
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -136,6 +152,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "here on exit — load in chrome://tracing or "
                          "Perfetto; token streams are bit-identical "
                          "with tracing on or off")
+    # ---------------------------------------------- chaos injection
+    ap.add_argument("--inject-fault", action="append", default=None,
+                    metavar="SITE[:K=V,...]",
+                    help="deterministic fault injection for chaos "
+                         "testing (repeatable). SITE is one of "
+                         "engine_step|replica_worker|pool_alloc|"
+                         "slow_burst|swap_error; keys: after=N (skip N "
+                         "passes), count=N (fire N times), delay_s=S "
+                         "(slow_burst stall), replica=rK (scope to one "
+                         "replica). e.g. "
+                         "--inject-fault replica_worker:after=2,replica=r0")
     add_mesh_argument(ap)
     return ap
 
@@ -289,15 +316,23 @@ def run_frontend(cfg, model, params, args, config: ServeConfig,
     if router.replicas[0].engine.mode != "continuous":
         raise SystemExit(f"--server unsupported for {cfg.name}: the arch "
                          f"falls back to the static bucketed engine")
+    # supervision (ISSUE-10): restart crashed/stalled workers and fail
+    # their in-flight requests over to healthy siblings
+    sup = Supervisor(router)
+    sup.start()
     try:
         asyncio.run(run_server(router, args.host, args.port))
     except KeyboardInterrupt:
         print("draining...")
+        sup.stop()
         router.drain(timeout=30)
+    finally:
+        sup.stop()
 
 
 def main() -> None:
     args = build_parser().parse_args()
+    install_sigterm_handler()
     config = ServeConfig.from_args(args)   # the ONE knob intake point
     # ONE obs bundle for the whole process: every replica labels its
     # series into this registry/tracer (docs/observability.md)

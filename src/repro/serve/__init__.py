@@ -20,12 +20,17 @@
              EOS / swap-or-recompute preemption; SLA-aware wait queue
              (priority/deadline) with a QueueFull depth cap
   frontend   async serving layer: OpenAI-style streaming HTTP server,
-             worker-thread replicas, least-loaded multi-replica router
+             worker-thread replicas, least-loaded multi-replica router,
+             replica supervision + in-flight failover
              (docs/serving_frontend.md)
+  faults     FaultPlan — deterministic chaos injection at named host
+             seams (engine step, replica worker, pool alloc, swap,
+             slow burst) for tests/smoke/bench
   sparse     2:4 weight packing → kernels.nm_spmm serve path
 """
 
 from repro.serve.config import ServeConfig
+from repro.serve.faults import FaultError, FaultPlan, FaultSpec
 from repro.serve.engine import (ServeEngine, Request, Result, StreamEvent,
                                 ContinuousSession)
 from repro.serve.kvpool import (PagedKVPool, StatePool, PrefixCache,
@@ -41,6 +46,9 @@ __all__ = [
     "StreamEvent",
     "ContinuousSession",
     "QueueFull",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
     "PagedKVPool",
     "PrefixCache",
     "HostArena",

@@ -33,6 +33,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.serve.faults import FaultPlan
+
 _MODES = ("continuous", "static")
 _SAMPLING = ("greedy", "temperature", "top-k", "top-p")
 
@@ -80,6 +82,14 @@ class ServeConfig:
     # Token streams are bit-identical under every combination.
     metrics: bool = True
     trace: bool = False
+    # fault injection (ISSUE-10, serve.faults): deterministic failures
+    # at named sites — engine-step raise, replica worker death, pool
+    # alloc failure, stalled burst, host-arena swap error — so every
+    # recovery path (supervision, failover, preemption degrade) is
+    # drivable from tests/CI.  None = nothing ever fires.  ONE plan is
+    # shared by all replicas built from this config (replica-scoped
+    # specs count per replica label).
+    faults: Optional[FaultPlan] = None
 
     def validate(self) -> "ServeConfig":
         """The single validation point.  Returns self (chainable)."""
@@ -117,6 +127,9 @@ class ServeConfig:
             raise ValueError("replicas must be >= 1")
         if self.queue_depth is not None and self.queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
+        if self.faults is not None:
+            for spec in self.faults.specs:
+                spec.validate()
         return self
 
     def resolved_num_pages(self) -> int:
@@ -172,4 +185,6 @@ class ServeConfig:
             queue_depth=args.queue_depth,
             metrics=getattr(args, "metrics", True),
             trace=getattr(args, "trace_out", None) is not None,
+            faults=(FaultPlan.parse(args.inject_fault)
+                    if getattr(args, "inject_fault", None) else None),
         ).validate()

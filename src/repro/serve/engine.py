@@ -75,11 +75,14 @@ class Request:
     # SLA fields (serve.scheduler wait-queue order: higher priority
     # first, then earlier deadline, then arrival; both optional — all-
     # default requests admit in exact FIFO).  ``deadline`` is an
-    # absolute time.monotonic() timestamp; it orders admission and lets
-    # the front end shed already-expired requests — it is never a hard
-    # kill switch for running sequences.
+    # absolute time.monotonic() timestamp; it always orders admission.
+    # With ``deadline_hard`` set (the wire path: a client-supplied
+    # ``deadline_ms``) an expired request is also RETIRED at the next
+    # sync interval — terminal event with ``finish_reason="timeout"``,
+    # pages/slot released (ISSUE-10); unset, it stays ordering-only.
     priority: int = 0
     deadline: Optional[float] = None
+    deadline_hard: bool = False
 
 
 @dataclasses.dataclass
@@ -110,12 +113,16 @@ class StreamEvent:
     only the NEWLY emitted tokens (after a preemption the recompute
     replays the identical prefix, and the session suppresses the
     already-delivered portion, so a streaming consumer never sees a
-    duplicate).  ``result`` is set on the final event."""
+    duplicate).  ``result`` is set on the final event, and
+    ``finish_reason`` says why it ended: ``"stop"`` (EOS), ``"length"``
+    (max_new_tokens), ``"timeout"`` (hard deadline, ISSUE-10) or
+    ``"cancelled"`` (client disconnect / explicit cancel)."""
 
     uid: int
     tokens: List[int]
     finished: bool = False
     result: Optional[Result] = None
+    finish_reason: Optional[str] = None
 
 
 class ServeEngine:
@@ -206,6 +213,14 @@ class ServeEngine:
         self.obs = obs
         self.m = ServeMetrics(obs)
         self._stats_base: Dict[str, float] = {}
+        # fault injection (ISSUE-10, serve.faults): the burst wrappers
+        # get a host-side hook firing the engine_step / slow_burst
+        # sites; the pool takes the plan for pool_alloc / swap_error
+        self.faults = config.faults
+        fault_hook = None
+        if self.faults is not None:
+            label = obs.label
+            fault_hook = lambda: self.faults.burst_hook(label)  # noqa: E731
 
         cfg = model.cfg
         # MoE is excluded: expert-capacity dropping makes each row's
@@ -232,7 +247,7 @@ class ServeEngine:
                 dtype=jnp.int8 if config.kv_dtype == "int8" else None,
                 mesh=mesh, prefix_cache=config.prefix_cache,
                 host_swap_pages=config.resolved_swap_pages(),
-                obs=self.obs)
+                obs=self.obs, faults=self.faults)
             state = StatePool(model, max_slots=max_batch)
             self.state_pool = state if state.has_state else None
             # swap preemption preserves KV pages only — recurrent-state
@@ -245,11 +260,13 @@ class ServeEngine:
             self._ring = self.steps_per_sync + 1
             self._burst = fused.make_continuous_burst(
                 model, page_size, temperature=self.temperature,
-                top_k=self.top_k, top_p=self.top_p, eos_id=self.eos_id)
+                top_k=self.top_k, top_p=self.top_p, eos_id=self.eos_id,
+                host_hook=fault_hook)
             self._prefill_burst = fused.make_prefill_burst(
                 model, page_size, self.chunk_size,
                 temperature=self.temperature, top_k=self.top_k,
-                top_p=self.top_p, eos_id=self.eos_id)
+                top_p=self.top_p, eos_id=self.eos_id,
+                host_hook=fault_hook)
             if mesh is not None:
                 from repro.dist import named_shardings
                 from repro.dist.sharding import decode_state_specs
@@ -483,6 +500,7 @@ class ContinuousSession:
             m.obs.tracer.instant("first_token", track=m.label,
                                  args={"uid": seq.req.uid})
         result = None
+        reason = None
         if fin:
             self._emitted.pop(seq.req.uid, None)
             now = time.monotonic()
@@ -497,15 +515,63 @@ class ContinuousSession:
                             prompt_len=len(seq.req.prompt),
                             decode_steps=seq.occupied_steps,
                             preemptions=seq.preemptions)
+            reason = ("stop" if len(seq.tokens) < seq.req.max_new_tokens
+                      else "length")
         return StreamEvent(uid=seq.req.uid, tokens=new, finished=fin,
-                           result=result)
+                           result=result, finish_reason=reason)
+
+    def cancel(self, uid: int, reason: str = "cancelled"
+               ) -> Optional[StreamEvent]:
+        """Retire a request anywhere in its lifecycle (ISSUE-10):
+        waiting, mid-prefill, mid-decode or swapped-out.  Pages, slot
+        and swap-arena space are released immediately (the pool's
+        ``check_invariants`` holds afterwards) and the terminal
+        :class:`StreamEvent` — empty token delta, ``finish_reason`` =
+        ``reason`` — is returned for delivery.  None when the uid is
+        unknown (already finished, or never submitted)."""
+        seq = self.sched.cancel(uid)
+        if seq is None:
+            return None
+        m = self.engine.m
+        (m.deadline_exceeded if reason == "timeout"
+         else m.cancelled).inc()
+        m.obs.tracer.instant("cancel", track=m.label,
+                             args={"uid": uid, "reason": reason,
+                                   "tokens": len(seq.tokens)})
+        m.obs.tracer.async_end("request", uid, track=m.label,
+                               args={"tokens": len(seq.tokens),
+                                     "finish_reason": reason})
+        self._emitted.pop(uid, None)
+        result = Result(uid=uid,
+                        tokens=np.asarray(seq.tokens, np.int32),
+                        prompt_len=len(seq.req.prompt),
+                        decode_steps=seq.occupied_steps,
+                        preemptions=seq.preemptions)
+        return StreamEvent(uid=uid, tokens=[], finished=True,
+                           result=result, finish_reason=reason)
+
+    def _expire_deadlines(self) -> List[StreamEvent]:
+        """Hard-deadline sweep, run once per sync interval: every
+        sequence whose ``deadline_hard`` timestamp has passed — waiting,
+        swapped-out or slotted — is cancelled with
+        ``finish_reason="timeout"`` (the front end's HTTP 504)."""
+        now = time.monotonic()
+        expired = [s.req.uid
+                   for s in (*self.sched.running, *self.sched.waiting)
+                   if s.req.deadline_hard and s.req.deadline is not None
+                   and now >= s.req.deadline]
+        return [ev for uid in expired
+                if (ev := self.cancel(uid, reason="timeout")) is not None]
 
     # ------------------------------------------------- one sync interval
     def step(self) -> List[StreamEvent]:
         from repro.serve.scheduler import SeqState
 
         eng, sched, pool = self.engine, self.sched, self.engine.pool
-        events: List[StreamEvent] = []
+        # 0) hard-deadline sweep: expired requests retire with a clean
+        #    terminal event BEFORE any capacity they hold can shape
+        #    this interval's admission (ISSUE-10)
+        events: List[StreamEvent] = self._expire_deadlines()
         # 1) join-at-prefill: new requests take free slots/pages now
         #    (recurrent-state slot rows reset to the init state —
         #    stale state can't mask by length like pages do)

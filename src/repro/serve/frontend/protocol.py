@@ -67,7 +67,9 @@ def to_engine_request(creq: CompletionRequest, uid: int,
                       now: Optional[float] = None) -> Request:
     """Lower a wire request to the engine's :class:`Request`, pinning
     the relative ``deadline_ms`` to an absolute monotonic timestamp at
-    admission time."""
+    admission time.  A wire deadline is HARD (ISSUE-10): past it the
+    engine retires the request with ``finish_reason="timeout"`` — the
+    server's HTTP 504 — instead of silently truncating."""
     if now is None:
         now = time.monotonic()
     return Request(
@@ -77,6 +79,7 @@ def to_engine_request(creq: CompletionRequest, uid: int,
         priority=creq.priority,
         deadline=(now + creq.deadline_ms / 1e3
                   if creq.deadline_ms is not None else None),
+        deadline_hard=creq.deadline_ms is not None,
     )
 
 
@@ -88,10 +91,13 @@ class CompletionChunk:
     uid: int
     tokens: List[int]
     finished: bool = False
+    finish_reason: Optional[str] = None   # stop|length|timeout|cancelled
+    #                                       on the terminal chunk
 
     def to_json(self) -> Dict[str, Any]:
         return {"id": self.uid, "object": "completion.chunk",
-                "tokens": self.tokens, "finished": self.finished}
+                "tokens": self.tokens, "finished": self.finished,
+                "finish_reason": self.finish_reason}
 
 
 @dataclasses.dataclass
@@ -105,19 +111,23 @@ class CompletionResponse:
     decode_steps: int = 0
     preemptions: int = 0
     replica: Optional[str] = None        # which replica served it
+    finish_reason: Optional[str] = None  # stop|length|timeout|cancelled
 
     @classmethod
-    def from_result(cls, r: Result, replica: Optional[str] = None
+    def from_result(cls, r: Result, replica: Optional[str] = None,
+                    finish_reason: Optional[str] = None
                     ) -> "CompletionResponse":
         return cls(uid=r.uid, tokens=[int(t) for t in r.tokens],
                    prompt_len=r.prompt_len, decode_steps=r.decode_steps,
-                   preemptions=r.preemptions, replica=replica)
+                   preemptions=r.preemptions, replica=replica,
+                   finish_reason=finish_reason)
 
     def to_json(self) -> Dict[str, Any]:
         return {"id": self.uid, "object": "completion",
                 "tokens": self.tokens, "prompt_len": self.prompt_len,
                 "decode_steps": self.decode_steps,
-                "preemptions": self.preemptions, "replica": self.replica}
+                "preemptions": self.preemptions, "replica": self.replica,
+                "finish_reason": self.finish_reason}
 
 
 # ---------------------------------------------------------------- SSE
@@ -141,6 +151,7 @@ def sse_decode(stream: bytes) -> List[CompletionChunk]:
         if payload == b"[DONE]":
             break
         obj = json.loads(payload)
-        chunks.append(CompletionChunk(uid=obj["id"], tokens=obj["tokens"],
-                                      finished=obj["finished"]))
+        chunks.append(CompletionChunk(
+            uid=obj["id"], tokens=obj["tokens"], finished=obj["finished"],
+            finish_reason=obj.get("finish_reason")))
     return chunks

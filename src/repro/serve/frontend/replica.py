@@ -22,6 +22,19 @@ Lifecycle: a replica is born accepting.  ``drain()`` stops intake
 (``ReplicaDraining`` on submit) but finishes everything in flight, then
 parks the worker — the router's rolling-shutdown building block.
 ``close()`` abandons in-flight work (tests / hard shutdown only).
+
+Fault tolerance (ISSUE-10): a worker that dies — an engine-step raise,
+an injected ``serve.faults`` failure — is captured in :attr:`crashed`
+instead of vanishing silently, and ``healthy`` goes False (thread dead,
+or stalled past ``stall_s``).  The supervisor's recovery pair is
+:meth:`take_inflight` (snapshot the per-request event log: engine
+request + tokens already handed to delivery) and :meth:`restart`
+(rebuild the session — which resets the shared pool — and start a
+fresh worker generation; a stalled previous worker exits at its next
+loop check and can no longer deliver into the new generation's
+subscriptions).  Per-request delivered-token counts are what failover
+replay-suppression trims, so a re-submitted request's client stream
+continues exactly where it stopped.
 """
 
 from __future__ import annotations
@@ -31,6 +44,7 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.serve.engine import Request, ServeEngine, StreamEvent
+from repro.serve.faults import FaultError
 from repro.serve.frontend.protocol import (CompletionRequest,
                                            CompletionResponse,
                                            to_engine_request)
@@ -49,7 +63,8 @@ class ReplicaDraining(RuntimeError):
 
 class Replica:
     def __init__(self, engine: ServeEngine, name: str = "r0",
-                 seed: int = 0, max_waiting=_UNSET):
+                 seed: int = 0, max_waiting=_UNSET,
+                 stall_s: float = HEALTH_STALL_S):
         # NOTE: router parity contract — every replica must be built
         # with the same seed, so a request's stream is bit-identical
         # regardless of which replica serves it (per-(uid, step) keys).
@@ -61,6 +76,9 @@ class Replica:
             max_waiting = engine.config.queue_depth
         self.name = name
         self.engine = engine
+        self._seed = seed
+        self._max_waiting = max_waiting
+        self.stall_s = stall_s
         self.session = engine.session(seed=seed, max_waiting=max_waiting)
         # health/queue-depth gauges: callback-backed, evaluated at
         # /metrics collection time (no writes from the worker loop)
@@ -71,11 +89,19 @@ class Replica:
             m.free_pages.set_fn(lambda: engine.pool.free_pages)
         self._lock = threading.Lock()
         self._subs: Dict[int, Callable[[StreamEvent], None]] = {}
+        # the per-request event log (ISSUE-10 failover): the engine
+        # request plus how many tokens were already handed to delivery
+        # — what take_inflight() snapshots for re-submission and what
+        # replay-suppression trims on the failed-over stream
+        self._inflight: Dict[int, Request] = {}
+        self._delivered: Dict[int, int] = {}
         self._wake = threading.Event()
         self._idle = threading.Event()
         self._idle.set()
         self._draining = False
         self._closed = False
+        self.crashed: Optional[BaseException] = None
+        self._gen = 0            # worker generation (restart fencing)
         self.last_step = time.monotonic()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"replica-{name}")
@@ -95,6 +121,7 @@ class Replica:
                 raise ValueError(f"uid {req.uid} already in flight")
             self.session.submit(req)     # may raise QueueFull/ValueError
             self._subs[req.uid] = on_event
+            self._inflight[req.uid] = req
         self._idle.clear()
         self._wake.set()
 
@@ -112,7 +139,7 @@ class Replica:
         """Worker alive and not stalled mid-step."""
         if self._closed or not self._thread.is_alive():
             return False
-        return time.monotonic() - self.last_step < HEALTH_STALL_S
+        return time.monotonic() - self.last_step < self.stall_s
 
     def stats(self) -> Dict[str, float]:
         # ``engine.stats`` is a property assembled from the obs
@@ -123,23 +150,110 @@ class Replica:
 
     # ------------------------------------------------------------ worker
     def _run(self) -> None:
-        while not self._closed:
-            with self._lock:
-                busy = self.session.has_work()
-                events: List[StreamEvent] = (self.session.step()
-                                             if busy else [])
-                subs = [(self._subs.get(ev.uid), ev) for ev in events]
-                for ev in events:
-                    if ev.finished:
-                        self._subs.pop(ev.uid, None)
-            self.last_step = time.monotonic()
-            for cb, ev in subs:
-                if cb is not None:
-                    cb(ev)
-            if not busy:
-                self._idle.set()
-                self._wake.wait(timeout=0.05)
-                self._wake.clear()
+        gen = self._gen
+        faults = self.engine.faults
+        try:
+            while not self._closed and gen == self._gen:
+                if faults is not None and faults.hit(
+                        "replica_worker", self.name):
+                    raise FaultError(
+                        f"injected replica_worker death ({self.name})")
+                with self._lock:
+                    if gen != self._gen:   # restarted under the lock wait
+                        return
+                    busy = self.session.has_work()
+                    events: List[StreamEvent] = (self.session.step()
+                                                 if busy else [])
+                    subs = [(self._subs.get(ev.uid), ev) for ev in events]
+                    for ev in events:
+                        # delivered-token accounting happens at the
+                        # hand-off to delivery: once recorded here the
+                        # tokens are the client's, and a later failover
+                        # replay suppresses exactly this many
+                        if ev.finished:
+                            self._subs.pop(ev.uid, None)
+                            self._inflight.pop(ev.uid, None)
+                            self._delivered.pop(ev.uid, None)
+                        elif ev.tokens:
+                            self._delivered[ev.uid] = (
+                                self._delivered.get(ev.uid, 0)
+                                + len(ev.tokens))
+                self.last_step = time.monotonic()
+                for cb, ev in subs:
+                    if cb is not None:
+                        cb(ev)
+                if not busy:
+                    self._idle.set()
+                    self._wake.wait(timeout=0.05)
+                    self._wake.clear()
+        except BaseException as e:          # worker death (ISSUE-10):
+            # capture instead of vanishing — healthy goes False (dead
+            # thread) and the supervisor drives restart + failover
+            self.crashed = e
+            self.engine.obs.tracer.instant(
+                "replica_crash", track=self.engine.obs.label,
+                args={"replica": self.name, "error": repr(e)})
+
+    # ---------------------------------------------------- fault recovery
+    def cancel(self, uid: int, reason: str = "cancelled") -> bool:
+        """Retire one in-flight request (client disconnect / explicit
+        cancel, ISSUE-10): the session releases its pages/slot/swap
+        immediately and the terminal event (``finish_reason`` =
+        ``reason``) is delivered to the subscriber if one is still
+        registered.  False when the uid is unknown here."""
+        with self._lock:
+            ev = self.session.cancel(uid, reason=reason)
+            if ev is None:
+                return False
+            cb = self._subs.pop(uid, None)
+            self._inflight.pop(uid, None)
+            self._delivered.pop(uid, None)
+        if cb is not None:
+            cb(ev)
+        return True
+
+    def take_inflight(self):
+        """Snapshot and clear the in-flight registrations — the
+        supervisor's failover intake after a crash.  Returns
+        ``[(engine_request, tokens_already_delivered, on_event), ...]``
+        in uid order; afterwards this replica owns none of them."""
+        with self._lock:
+            out = [(self._inflight[uid], self._delivered.get(uid, 0),
+                    self._subs.get(uid))
+                   for uid in sorted(self._inflight)]
+            self._inflight.clear()
+            self._subs.clear()
+            self._delivered.clear()
+        return out
+
+    def restart(self) -> None:
+        """Rebuild the session (resetting the pool) and start a fresh
+        worker generation — the supervisor's recovery step after
+        :meth:`take_inflight`.  A merely-stalled previous worker is
+        given a short grace to finish its step; either way the
+        generation bump fences it out of the new session (it exits at
+        its next loop check, and its late events find no subscribers)."""
+        self._gen += 1
+        old = self._thread
+        if old.is_alive():
+            old.join(timeout=2.0)
+        self.crashed = None
+        self.session = self.engine.session(seed=self._seed,
+                                           max_waiting=self._max_waiting)
+        self._subs = {}
+        self._inflight = {}
+        self._delivered = {}
+        self._draining = False
+        self._closed = False
+        self._idle.set()
+        self.last_step = time.monotonic()
+        self.engine.m.replica_restarts.inc()
+        self.engine.obs.tracer.instant(
+            "replica_restart", track=self.engine.obs.label,
+            args={"replica": self.name})
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"replica-{self.name}")
+        self._thread.start()
 
     # --------------------------------------------------------- lifecycle
     def drain(self, timeout: Optional[float] = None) -> bool:

@@ -22,11 +22,13 @@ wait for in-flight requests to finish, park the workers.
 from __future__ import annotations
 
 import itertools
+import random
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 from repro.obs.metrics import merge_histograms
-from repro.serve.engine import StreamEvent
+from repro.serve.engine import Request, StreamEvent
 from repro.serve.frontend.protocol import (CompletionRequest,
                                            CompletionResponse,
                                            to_engine_request)
@@ -34,11 +36,29 @@ from repro.serve.frontend.replica import Replica, ReplicaDraining
 from repro.serve.scheduler import QueueFull
 
 
+class NoHealthyReplicas(RuntimeError):
+    """Every replica is down (crashed/stalled, none merely draining) —
+    transient while the supervisor restarts workers, so the server
+    surfaces it as HTTP 503 with a ``Retry-After`` hint instead of a
+    500-shaped handler crash (ISSUE-10 satellite)."""
+
+    retry_after_s: float = 1.0
+
+
 class Router:
-    def __init__(self, replicas: List[Replica]):
+    def __init__(self, replicas: List[Replica],
+                 submit_retries: int = 0,
+                 retry_backoff_s: float = 0.05):
         if not replicas:
             raise ValueError("router needs at least one replica")
         self.replicas = list(replicas)
+        # bounded jittered-backoff retries (ISSUE-10): how many times
+        # submit re-sweeps the replicas when every one is transiently
+        # full/draining/down — 0 keeps the original fail-fast behavior
+        # (QueueFull -> 429); the supervisor's failover re-submission
+        # passes its own budget to ride out the restart window
+        self.submit_retries = submit_retries
+        self.retry_backoff_s = retry_backoff_s
         self._uids = itertools.count()
         self._uid_lock = threading.Lock()
 
@@ -48,7 +68,7 @@ class Router:
         if not up:
             if any(r.draining for r in self.replicas):
                 raise ReplicaDraining("all replicas draining")
-            raise RuntimeError("no healthy replicas")
+            raise NoHealthyReplicas("no healthy replicas")
         return sorted(up, key=lambda r: r.load)
 
     def assign_uid(self, creq: CompletionRequest) -> int:
@@ -59,23 +79,57 @@ class Router:
 
     def submit(self, creq: CompletionRequest,
                on_event: Callable[[StreamEvent], None],
-               uid: Optional[int] = None) -> Replica:
+               uid: Optional[int] = None,
+               retries: Optional[int] = None) -> Replica:
         """Place one wire request on the least-loaded healthy replica,
         failing over across full ones.  Returns the replica that took
         it; raises ``QueueFull`` when every healthy replica is at its
-        depth cap (HTTP 429) and ``ValueError`` on an unservable
-        request."""
+        depth cap (HTTP 429), :class:`NoHealthyReplicas` when none is
+        up (HTTP 503) and ``ValueError`` on an unservable request."""
         if uid is None:
             uid = self.assign_uid(creq)
-        req = to_engine_request(creq, uid)
-        last: Optional[Exception] = None
-        for rep in self._candidates():
+        return self.submit_request(to_engine_request(creq, uid), on_event,
+                                   retries=retries)
+
+    def submit_request(self, req: Request,
+                       on_event: Callable[[StreamEvent], None],
+                       retries: Optional[int] = None) -> Replica:
+        """Engine-level submit (the supervisor's failover entry): sweep
+        the healthy replicas least-loaded-first, and on a fully
+        full/draining/down sweep retry up to ``retries`` times with
+        bounded jittered exponential backoff — transient windows during
+        a crash/restart (ISSUE-10) resolve instead of bouncing the
+        request.  ``retries=None`` uses the router default (0)."""
+        if retries is None:
+            retries = self.submit_retries
+        attempt = 0
+        while True:
+            last: Optional[Exception] = None
             try:
-                rep.submit(req, on_event)
-                return rep
-            except (QueueFull, ReplicaDraining) as e:
-                last = e
-        raise QueueFull(f"all replicas at capacity ({last})")
+                cands = self._candidates()
+            except (NoHealthyReplicas, ReplicaDraining) as e:
+                cands, last = [], e
+            for rep in cands:
+                try:
+                    rep.submit(req, on_event)
+                    return rep
+                except (QueueFull, ReplicaDraining) as e:
+                    last = e
+            if attempt >= retries:
+                if not cands:       # nobody to even try: typed signal
+                    raise last      # (503 / draining) straight through
+                raise QueueFull(f"all replicas at capacity ({last})")
+            attempt += 1
+            # jittered exponential backoff, capped at 1s per wait
+            delay = min(1.0, self.retry_backoff_s * (2 ** (attempt - 1)))
+            time.sleep(delay * (0.5 + 0.5 * random.random()))
+
+    def cancel(self, uid: int, reason: str = "cancelled") -> bool:
+        """Cancel an in-flight request wherever it landed (after a
+        failover that may not be the replica that first took it) —
+        the server's client-disconnect path.  False when no replica
+        knows the uid (already finished)."""
+        return any(r.cancel(uid, reason=reason) for r in self.replicas)
 
     # ----------------------------------------------------- batch client
     def complete(self, creqs: List[CompletionRequest]

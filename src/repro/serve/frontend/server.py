@@ -20,7 +20,17 @@ Stdlib only (asyncio + hand-rolled HTTP/1.1 — no new deps).  Endpoints:
 
 Status mapping: scheduler ``QueueFull`` → **429** (backpressure — the
 wait queue is at its depth cap; retry later), validation → 400,
-unknown route → 404, draining → 503.
+unknown route → 404, draining → 503, every replica down → **503 with a
+``Retry-After`` hint** (transient while the supervisor restarts
+workers), hard deadline exceeded → **504** with
+``finish_reason="timeout"`` (non-streaming; a stream carries the
+reason on its terminal chunk).
+
+Cancellation (ISSUE-10): each completion handler watches its client
+connection for EOF while it waits on engine events; a client that
+disconnects mid-stream triggers ``router.cancel(uid)``, which retires
+the sequence at any phase and frees its KV pages immediately — no
+orphaned decode burning pool capacity.
 
 Streaming bridge: the replica worker thread fires per-request callbacks
 (`replica.py`); the handler wraps each in ``loop.call_soon_threadsafe``
@@ -44,24 +54,29 @@ from repro.serve.frontend.protocol import (SSE_DONE, CompletionChunk,
                                            CompletionRequest,
                                            CompletionResponse, sse_encode)
 from repro.serve.frontend.replica import ReplicaDraining
-from repro.serve.frontend.router import Router
+from repro.serve.frontend.router import NoHealthyReplicas, Router
 from repro.serve.scheduler import QueueFull
 
 _MAX_BODY = 8 << 20
 
 
 def _response(status: int, body: bytes,
-              ctype: str = "application/json") -> bytes:
+              ctype: str = "application/json",
+              headers: Optional[Dict[str, str]] = None) -> bytes:
     reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
-              429: "Too Many Requests", 503: "Service Unavailable"}
+              429: "Too Many Requests", 500: "Internal Server Error",
+              503: "Service Unavailable", 504: "Gateway Timeout"}
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
     return (f"HTTP/1.1 {status} {reason.get(status, 'Error')}\r\n"
             f"Content-Type: {ctype}\r\n"
-            f"Content-Length: {len(body)}\r\n"
+            f"Content-Length: {len(body)}\r\n{extra}"
             f"Connection: close\r\n\r\n").encode() + body
 
 
-def _error(status: int, msg: str) -> bytes:
-    return _response(status, json.dumps({"error": msg}).encode())
+def _error(status: int, msg: str,
+           headers: Optional[Dict[str, str]] = None) -> bytes:
+    return _response(status, json.dumps({"error": msg}).encode(),
+                     headers=headers)
 
 
 class Server:
@@ -116,7 +131,7 @@ class Server:
             body = await reader.readexactly(min(clen, _MAX_BODY))
 
             if method == "POST" and path == "/v1/completions":
-                await self._completions(body, writer)
+                await self._completions(body, reader, writer)
             elif method == "GET" and path == "/healthz":
                 writer.write(_response(
                     200, json.dumps(self.router.health()).encode()))
@@ -142,6 +157,7 @@ class Server:
 
     # ------------------------------------------------------ completions
     async def _completions(self, body: bytes,
+                           reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
         try:
             creq = CompletionRequest.from_json(body)
@@ -164,32 +180,75 @@ class Server:
         except ReplicaDraining:
             writer.write(_error(503, "server is draining"))
             return
+        except NoHealthyReplicas as e:
+            writer.write(_error(
+                503, str(e),
+                headers={"Retry-After":
+                         str(max(1, int(round(e.retry_after_s))))}))
+            return
         except ValueError as e:
             writer.write(_error(400, str(e)))
             return
 
-        if creq.stream:
-            writer.write(b"HTTP/1.1 200 OK\r\n"
-                         b"Content-Type: text/event-stream\r\n"
-                         b"Cache-Control: no-cache\r\n"
-                         b"Connection: close\r\n\r\n")
-            await writer.drain()
-            while True:
-                ev = await q.get()
-                writer.write(sse_encode(CompletionChunk(
-                    uid=ev.uid, tokens=ev.tokens, finished=ev.finished)))
-                await writer.drain()      # per-interval flush: tokens
-                if ev.finished:           # stream as they decode
-                    break
-            writer.write(SSE_DONE)
-        else:
-            while True:
-                ev = await q.get()
-                if ev.finished:
-                    break
-            resp = CompletionResponse.from_result(ev.result,
-                                                  replica=rep.name)
-            writer.write(_response(200, json.dumps(resp.to_json()).encode()))
+        # client-disconnect watcher (ISSUE-10): the request body is
+        # fully read and responses are Connection: close, so the next
+        # byte a well-behaved client sends is EOF — reader.read()
+        # returning means the peer hung up and we cancel the request,
+        # freeing its pages instead of decoding into the void.
+        eof_task = asyncio.ensure_future(reader.read())
+
+        async def next_event() -> Optional[StreamEvent]:
+            """Engine event, or None on client disconnect."""
+            get = asyncio.ensure_future(q.get())
+            done, _ = await asyncio.wait(
+                {get, eof_task}, return_when=asyncio.FIRST_COMPLETED)
+            if get in done:
+                return get.result()
+            get.cancel()
+            return None
+
+        try:
+            if creq.stream:
+                writer.write(b"HTTP/1.1 200 OK\r\n"
+                             b"Content-Type: text/event-stream\r\n"
+                             b"Cache-Control: no-cache\r\n"
+                             b"Connection: close\r\n\r\n")
+                await writer.drain()
+                while True:
+                    ev = await next_event()
+                    if ev is None:
+                        self.router.cancel(uid)
+                        return
+                    writer.write(sse_encode(CompletionChunk(
+                        uid=ev.uid, tokens=ev.tokens, finished=ev.finished,
+                        finish_reason=ev.finish_reason)))
+                    await writer.drain()  # per-interval flush: tokens
+                    if ev.finished:       # stream as they decode
+                        break
+                writer.write(SSE_DONE)
+            else:
+                while True:
+                    ev = await next_event()
+                    if ev is None:
+                        self.router.cancel(uid)
+                        return
+                    if ev.finished:
+                        break
+                if ev.finish_reason == "timeout":
+                    writer.write(_error(
+                        504, f"deadline exceeded for request {uid}"))
+                    return
+                resp = CompletionResponse.from_result(
+                    ev.result, replica=rep.name,
+                    finish_reason=ev.finish_reason)
+                writer.write(
+                    _response(200, json.dumps(resp.to_json()).encode()))
+        except ConnectionError:
+            # write-side failure is the same client disconnect
+            self.router.cancel(uid)
+            raise
+        finally:
+            eof_task.cancel()
 
 
 async def run_server(router: Router, host: str = "127.0.0.1",

@@ -181,9 +181,26 @@ def _make_decode_loop(model, page_size: int, *, temperature: float,
     return loop
 
 
+def _with_host_hook(jitted, host_hook):
+    """Wrap a jitted burst with a host-side pre-dispatch hook — the
+    fault-injection seam (ISSUE-10, serve.faults): the hook runs on the
+    host BEFORE the device dispatch, where it can stall (slow_burst) or
+    raise (engine_step) without ever entering a traced body.  None (the
+    default everywhere outside chaos runs) keeps the bare jitted
+    callable — zero overhead."""
+    if host_hook is None:
+        return jitted
+
+    def burst(*args):
+        host_hook()
+        return jitted(*args)
+
+    return burst
+
+
 def make_continuous_burst(model, page_size: int, *, temperature: float,
                           top_k: Optional[int], top_p: Optional[float],
-                          eos_id: Optional[int]):
+                          eos_id: Optional[int], host_hook=None):
     """Build the jitted K-step continuous-decode burst.
 
     ``burst(params, kv, tables, state, base_key) -> (kv, state)`` runs
@@ -198,12 +215,13 @@ def make_continuous_burst(model, page_size: int, *, temperature: float,
     eos = -1 if eos_id is None else int(eos_id)   # -1 never matches a token
     loop = _make_decode_loop(model, page_size, temperature=temperature,
                              top_k=top_k, top_p=top_p, eos=eos)
-    return jax.jit(loop, donate_argnums=(1,))
+    return _with_host_hook(jax.jit(loop, donate_argnums=(1,)), host_hook)
 
 
 def make_prefill_burst(model, page_size: int, chunk_size: int, *,
                        temperature: float, top_k: Optional[int],
-                       top_p: Optional[float], eos_id: Optional[int]):
+                       top_p: Optional[float], eos_id: Optional[int],
+                       host_hook=None):
     """Build the jitted prefill-chunk + K-step decode burst — the
     sync-floor fix.
 
@@ -265,7 +283,8 @@ def make_prefill_burst(model, page_size: int, chunk_size: int, *,
         state["n_out"] = act(state["n_out"], 1)
         return loop(params, kv, tables, state, base_key)
 
-    return jax.jit(pburst, donate_argnums=(1,))
+    return _with_host_hook(jax.jit(pburst, donate_argnums=(1,)),
+                           host_hook)
 
 
 # ----------------------------------------------------------------------

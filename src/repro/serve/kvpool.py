@@ -131,6 +131,7 @@ class PagedKVPool:
         prefix_cache: bool = False,
         host_swap_pages: int = 0,
         obs: Optional[Obs] = None,
+        faults=None,
     ):
         if num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is scrap)")
@@ -173,6 +174,10 @@ class PagedKVPool:
         # hands down its own so everything lands in one namespace.
         # ``self.stats`` survives as a property over the registry.
         self.obs = obs if obs is not None else Obs.create(trace=False)
+        # fault injection (ISSUE-10, serve.faults): pool_alloc fires as
+        # a forced exhaustion, swap_error as an arena failure — both
+        # land on paths real exhaustion already exercises
+        self.faults = faults
         self.m = ServeMetrics(self.obs)
         self._stats_base: Dict[str, float] = {}
         self.prefix: Optional[PrefixCache] = (
@@ -224,6 +229,9 @@ class PagedKVPool:
         leaves LRU-first — cached prefixes never block live traffic."""
         if n <= 0:              # [-0:] would slice the WHOLE free list
             return []
+        if self.faults is not None and self.faults.hit(
+                "pool_alloc", self.obs.label):
+            return None         # injected exhaustion (ISSUE-10)
         if self.prefix is not None:
             while n > len(self._free) and self.prefix.evict_lru():
                 pass
@@ -397,6 +405,9 @@ class PagedKVPool:
         recompute preemption), leaving the slot untouched."""
         if self.arena is None:
             return None
+        if self.faults is not None and self.faults.hit(
+                "swap_error", self.obs.label):
+            return None         # injected arena failure -> recompute
         pages = self.slot_pages(slot)
         host = [p for p in pages if self._ref[p] == 1]
         if not self.arena.has_room(len(host)):
@@ -423,6 +434,9 @@ class PagedKVPool:
         slot's table in logical order — kept pages slot back in place
         with the record's reference becoming the table's.  Nothing is
         mutated on failure."""
+        if self.faults is not None and self.faults.hit(
+                "swap_error", self.obs.label):
+            return False        # injected arena failure -> retry later
         host_slots = [s for tag, s in record.entries if tag == "host"]
         fresh = self.alloc(len(host_slots))
         if fresh is None:

@@ -114,6 +114,23 @@ class ServeMetrics:
         self.kv_quant_pages = c(
             "kv_quant_pages_total",
             "int8 KV pages allocated (quantize-on-write pools only)")
+        # ---- fault tolerance (ISSUE-10) --------------------------------
+        self.replica_restarts = c(
+            "replica_restarts_total",
+            "Replica workers restarted by the supervisor after a "
+            "crash/stall")
+        self.failed_over = c(
+            "requests_failed_over_total",
+            "In-flight requests re-submitted after a replica "
+            "crash (already-streamed prefixes replay-suppressed)")
+        self.cancelled = c(
+            "requests_cancelled_total",
+            "Requests cancelled mid-flight (client disconnect / "
+            "explicit cancel) — pages and slot released immediately")
+        self.deadline_exceeded = c(
+            "requests_deadline_exceeded_total",
+            "Requests retired at their hard deadline "
+            "(finish_reason=timeout / HTTP 504)")
         # ---- latency histograms ---------------------------------------
         self.ttft = h(
             "serve_ttft_seconds",
@@ -126,6 +143,10 @@ class ServeMetrics:
         self.burst_steps = h(
             "serve_burst_steps", "Decode steps per device burst",
             buckets=COUNT_BUCKETS)
+        self.recovery = h(
+            "serve_recovery_seconds",
+            "Crash/stall detection -> worker restarted and every "
+            "in-flight request re-submitted")
         # ---- gauges (replica.py binds the callbacks) -------------------
         self.queue_depth = g(
             "serve_queue_depth", "Requests in flight (waiting + slotted)")
@@ -153,6 +174,10 @@ class ServeMetrics:
             "swap_in_wall_s": self.swap_in_wall,
             "sparse_dispatch": self.sparse_dispatch,
             "kv_quant_pages": self.kv_quant_pages,
+            "replica_restarts": self.replica_restarts,
+            "failed_over": self.failed_over,
+            "cancelled": self.cancelled,
+            "deadline_exceeded": self.deadline_exceeded,
         }
 
     @property

@@ -140,6 +140,17 @@ class _WaitQueue:
     def pop(self) -> Sequence:
         return heapq.heappop(self._heap)[-1]
 
+    def remove(self, uid: int) -> Optional[Sequence]:
+        """Drop (and return) the entry for ``uid`` wherever it sits in
+        the heap — the cancellation path.  None when absent."""
+        for i, entry in enumerate(self._heap):
+            if entry[-1].req.uid == uid:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return entry[-1]
+        return None
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -486,6 +497,29 @@ class Scheduler:
     def finish(self, seq: Sequence) -> None:
         self._release(seq)
         seq.state = SeqState.FINISHED
+
+    def cancel(self, uid: int) -> Optional[Sequence]:
+        """Retire one request wherever it is in the state machine
+        (ISSUE-10): slotted (mid-prefill or mid-decode) releases slot +
+        pages immediately, waiting just leaves the queue, swapped-out
+        additionally frees its host-arena slots and kept page refs
+        (:meth:`PagedKVPool.drop_swap`).  Returns the sequence (now
+        FINISHED) or None when the uid is unknown — already finished,
+        or never submitted.  ``check_invariants`` holds afterwards: a
+        cancel can never leak a page."""
+        for seq in self.running:
+            if seq.req.uid == uid:
+                self._release(seq)
+                seq.state = SeqState.FINISHED
+                return seq
+        seq = self.waiting.remove(uid)
+        if seq is None:
+            return None
+        if seq.swap is not None:
+            self.pool.drop_swap(seq.swap)
+            seq.swap = None
+        seq.state = SeqState.FINISHED
+        return seq
 
     def _release(self, seq: Sequence) -> None:
         self.pool.clear_slot(seq.slot)
